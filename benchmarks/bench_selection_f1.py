@@ -1,0 +1,40 @@
+"""Paper Fig. 2: variable selection under high correlation (rho = 0.9),
+F1 vs support size, three sample sizes; beam-search CD (ours) vs greedy
+OMP and the l1 path (coxnet analogue). Sizes reduced for the 1-core CPU
+container; the regime (p = n, rho = 0.9, k-sparse truth) matches the paper.
+"""
+import time
+
+import numpy as np
+
+from repro.core import beam, cox, path
+from repro.data.synthetic import SyntheticSpec, make_correlated_survival
+from repro.survival import metrics
+
+
+def run(sizes=(600, 400, 300), p=300, k=10):
+    # censor_scale=3.0 reproduces the paper's effective event rate (~70%;
+    # its literal Eq. 30 indicator yields mostly-observed events — see
+    # data/synthetic.py docstring for the discrepancy note)
+    rows = []
+    for n in sizes:
+        x, t, delta, beta_star = make_correlated_survival(
+            SyntheticSpec(n=n, p=p, k=k, rho=0.9, seed=1, censor_scale=3.0))
+        data = cox.prepare(x, t, delta)
+        t0 = time.perf_counter()
+        res_b = beam.beam_search(data, k=k, beam_width=4, n_expand=6)
+        dt_b = time.perf_counter() - t0
+        res_o = beam.omp_greedy(data, k=k)
+        res_l1 = path.l1_path(data, n_lambdas=16, lambda_min_ratio=0.02,
+                              n_iters=60)
+        f1_b = metrics.support_f1(beta_star, res_b.betas[-1])[2]
+        f1_o = metrics.support_f1(beta_star, res_o.betas[-1])[2]
+        f1_l = 0.0
+        for b, s in zip(res_l1.betas, res_l1.support_sizes):
+            if s <= k:
+                f1_l = max(f1_l, metrics.support_f1(beta_star, b)[2])
+        rows.append((f"selection_f1/beam/n={n}", dt_b / k * 1e6,
+                     f"f1={f1_b:.3f}"))
+        rows.append((f"selection_f1/omp/n={n}", 0.0, f"f1={f1_o:.3f}"))
+        rows.append((f"selection_f1/l1path/n={n}", 0.0, f"f1={f1_l:.3f}"))
+    return rows

@@ -1,0 +1,440 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf hillclimb driver: hypothesis -> change -> re-lower -> re-analyse.
+
+Three cells (harness criteria):
+  A. deepseek-67b train_4k   — worst memory blow-up (temp 285 GB/dev)
+  B. mamba2-130m train_4k    — most collective-bound baseline
+  C. distributed CPH CD      — the paper's own technique at production scale
+
+Each variant is lowered+compiled on the production mesh; we record
+memory_analysis, extrapolated flops/bytes/collectives (same probe scheme as
+dryrun), and append to benchmarks/results/perf_log.json.
+"""
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np   # noqa: E402
+
+from repro.analysis import roofline as rl                    # noqa: E402
+from repro.configs import SHAPES, TrainConfig, get_config    # noqa: E402
+from repro.launch import dryrun                              # noqa: E402
+from repro.launch.mesh import make_production_mesh           # noqa: E402
+
+OUT = os.path.join(os.path.dirname(__file__), "results")
+
+
+def measure(lowered, n_dev=256):
+    cm = lowered.compile()
+    try:
+        ma = cm.memory_analysis()
+        mem = {k: int(getattr(ma, k)) for k in
+               ("argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes") if hasattr(ma, k)}
+    except Exception as e:
+        mem = {"error": str(e)}
+    ca = cm.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    coll = rl.parse_collectives(cm.as_text())
+    return {"memory": mem,
+            "flops_raw": float(ca.get("flops", 0.0)),
+            "bytes_raw": float(ca.get("bytes accessed", 0.0)),
+            "coll_raw": coll.to_json()}
+
+
+def probe_terms(arch, shape_name, **knobs):
+    """Depth-extrapolated (flops, bytes, coll_moved) per device."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    probes = {}
+    for u in (1, 2):
+        lw, *_ = dryrun.lower_cell(
+            arch, shape_name, False,
+            cfg_override=dryrun.analysis_config(cfg, shape, u), **knobs)
+        cm = lw.compile()
+        ca = cm.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        pc = rl.parse_collectives(cm.as_text())
+        probes[u] = (float(ca.get("flops", 0)),
+                     float(ca.get("bytes accessed", 0)), pc.moved_bytes)
+    units = dryrun.depth_units_of(cfg)
+    f, b, c = (probes[1][i] + (units - 1) * (probes[2][i] - probes[1][i])
+               for i in range(3))
+    return {"flops": f, "bytes": b, "coll": c,
+            "compute_s": f / rl.PEAK_FLOPS, "memory_s": b / rl.HBM_BW,
+            "collective_s": c / rl.ICI_BW}
+
+
+def _terms_for(cfg, shape_name, tcfg=None):
+    shape = SHAPES[shape_name]
+    probes = {}
+    for u in (1, 2):
+        cfg_u = dryrun.analysis_config(cfg, shape, u)
+        lw, *_ = dryrun.lower_cell(cfg.name, shape_name, False,
+                                   cfg_override=cfg_u, tcfg=tcfg)
+        cm = lw.compile()
+        ca = cm.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        pc = rl.parse_collectives(cm.as_text())
+        probes[u] = (float(ca.get("flops", 0)),
+                     float(ca.get("bytes accessed", 0)), pc.moved_bytes)
+    units = dryrun.depth_units_of(cfg)
+    f, b, c = (probes[1][i] + (units - 1) * (probes[2][i] - probes[1][i])
+               for i in range(3))
+    return {"flops": f, "bytes": b, "coll": c,
+            "compute_s": f / rl.PEAK_FLOPS, "memory_s": b / rl.HBM_BW,
+            "collective_s": c / rl.ICI_BW}
+
+
+def log(name, rec):
+    os.makedirs(OUT, exist_ok=True)
+    path = os.path.join(OUT, "perf_log.json")
+    hist = []
+    if os.path.exists(path):
+        hist = json.load(open(path))
+    hist.append({"name": name, **rec, "t": time.strftime("%H:%M:%S")})
+    json.dump(hist, open(path, "w"), indent=1)
+    print(f"[perf] {name}: {json.dumps(rec)[:240]}", flush=True)
+
+
+# ---------------------------------------------------------------------------
+# Experiment A / B: train-cell variants
+# ---------------------------------------------------------------------------
+
+def train_variant(arch, name, *, microbatch=0, param_mode=None,
+                  donate=False, with_probes=False):
+    tcfg = TrainConfig(microbatch=microbatch) if microbatch else None
+    lw, *_ = dryrun.lower_cell(arch, "train_4k", False, tcfg=tcfg,
+                               param_mode=param_mode, donate=donate)
+    rec = measure(lw)
+    if with_probes:
+        rec["terms"] = probe_terms(arch, "train_4k",
+                                   param_mode=param_mode, donate=donate)
+    log(f"{arch}/train_4k/{name}", rec)
+    return rec
+
+
+# ---------------------------------------------------------------------------
+# Experiment C: distributed CPH (the paper's technique)
+# ---------------------------------------------------------------------------
+
+def cph_variants(n=1 << 22, p=2048):
+    from repro.core import cox, distributed, surrogate
+    mesh = make_production_mesh()
+    P = jax.sharding.PartitionSpec
+    NS = jax.sharding.NamedSharding
+
+    x = jax.ShapeDtypeStruct((n, p), jnp.float32,
+                             sharding=NS(mesh, P("data", "model")))
+    vec = jax.ShapeDtypeStruct((n,), jnp.float32,
+                               sharding=NS(mesh, P("data")))
+    pvec = jax.ShapeDtypeStruct((p,), jnp.float32,
+                                sharding=NS(mesh, P("model")))
+    rs = jax.ShapeDtypeStruct((n,), jnp.int32, sharding=NS(mesh, P("data")))
+    data = cox.CoxData(x=x, delta=vec, risk_start=rs, tie_end=rs)
+
+    with jax.set_mesh(mesh):
+        # C0: GSPMD-auto partitioning of one CD coordinate touch
+        def cd_coord_auto(data, eta, beta, l2c):
+            xl = data.x[:, 0]
+            g, _, _ = cox.coord_derivs(data, eta, xl, order=2)
+            step = surrogate.quad_l1_prox(g, l2c[0], beta[0], 0.0)
+            return eta + step * xl, beta.at[0].add(step)
+
+        lw = jax.jit(cd_coord_auto).lower(data, vec, pvec, pvec)
+        log("cph/C0_gspmd_auto_per_coord", measure(lw))
+
+        # C1: shard_map decoupled-scan CD coordinate touch
+        def cd_coord_shardmap(data, eta, beta, l2c):
+            xl = data.x[:, 0]
+            w, s0, a = distributed.sharded_risk_stats(data, eta, mesh)
+            g = jnp.sum((w * a - data.delta) * xl)
+            step = surrogate.quad_l1_prox(g, l2c[0], beta[0], 0.0)
+            return eta + step * xl, beta.at[0].add(step)
+
+        lw = jax.jit(cd_coord_shardmap).lower(data, vec, pvec, pvec)
+        log("cph/C1_shardmap_scan_per_coord", measure(lw))
+
+        # C2: beyond-paper GEMV full-gradient pass (all p coordinates)
+        def full_grad(data, eta):
+            return distributed.sharded_grad_hess_all(data, eta, mesh)
+
+        lw = jax.jit(full_grad).lower(data, vec)
+        log("cph/C2_gemv_all_p", measure(lw))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--exp", default="all",
+                    choices=["all", "A", "B", "C", "A4", "B2", "B3", "B4", "B5",
+                             "B6", "A5", "A6"])
+    args = ap.parse_args()
+    if args.exp in ("all", "A"):
+        train_variant("deepseek-67b", "A1_donate", donate=True)
+        train_variant("deepseek-67b", "A2_microbatch8",
+                      microbatch=8, donate=True)
+        train_variant("deepseek-67b", "A3_microbatch16",
+                      microbatch=16, donate=True)
+    if args.exp == "A4":
+        train_variant("deepseek-67b", "A4_microbatch32",
+                      microbatch=32, donate=True)
+    if args.exp == "B2":
+        mamba2_pure_dp()
+    if args.exp == "B3":
+        mamba2_hybrid_dp()
+    if args.exp == "B4":
+        cfg = get_config("mamba2-130m").scaled(ssm_chunk=64)
+        lw, *_ = dryrun.lower_cell("mamba2-130m", "train_4k", False,
+                                   cfg_override=cfg, donate=True)
+        rec = measure(lw)
+        rec["terms"] = _terms_for(cfg, "train_4k")
+        log("mamba2-130m/train_4k/B4_ssd_chunk64", rec)
+    if args.exp == "B6":
+        tc = TrainConfig(remat="dots")
+        lw, *_ = dryrun.lower_cell("mamba2-130m", "train_4k", False,
+                                   tcfg=tc, donate=True)
+        rec = measure(lw)
+        rec["terms"] = _terms_for(get_config("mamba2-130m"), "train_4k",
+                                  tcfg=tc)
+        log("mamba2-130m/train_4k/B6_remat_dots", rec)
+    if args.exp == "A6":
+        deepseek_flat_fsdp()
+    if args.exp == "A5":
+        tc = TrainConfig(microbatch=16, remat="dots")
+        lw, *_ = dryrun.lower_cell("deepseek-67b", "train_4k", False,
+                                   tcfg=tc, donate=True)
+        log("deepseek-67b/train_4k/A5_mb16_remat_dots", measure(lw))
+    if args.exp == "B5":
+        tc = TrainConfig(remat=False)
+        lw, *_ = dryrun.lower_cell("mamba2-130m", "train_4k", False,
+                                   tcfg=tc, donate=True)
+        rec = measure(lw)
+        rec["terms"] = _terms_for(get_config("mamba2-130m"), "train_4k",
+                                  tcfg=tc)
+        log("mamba2-130m/train_4k/B5_no_remat", rec)
+    if args.exp in ("all", "B"):
+        train_variant("mamba2-130m", "B1_no_fsdp", param_mode="serve",
+                      donate=True, with_probes=True)
+        train_variant("mamba2-130m", "B0_baseline_probes", donate=False,
+                      with_probes=True)
+    if args.exp in ("all", "C"):
+        cph_variants()
+
+
+# ---------------------------------------------------------------------------
+# Round-2 variants (added after round-1 measurements; see EXPERIMENTS.md)
+# ---------------------------------------------------------------------------
+
+def mamba2_pure_dp():
+    """B2: for a 130M model, TP is pure overhead — use the model axis as
+    extra data parallelism (batch 256 over all 256 chips, params
+    replicated). Hypothesis: collective term collapses to the single grad
+    all-reduce (~2 * 0.7GB * 255/256 / 50GB/s ~ 28ms) from 1.43s."""
+    from repro.models import build_model
+    from repro.train.trainer import TrainState, make_train_step
+    from repro.train import optimizer as opt_lib
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    cfg = get_config("mamba2-130m")
+    shape = SHAPES["train_4k"]
+    model = build_model(cfg)
+    mesh = make_production_mesh()
+    with jax.set_mesh(mesh):
+        pshape = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+        repl = NamedSharding(mesh, P())
+        params = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=repl),
+            pshape)
+        opt_shape = jax.eval_shape(opt_lib.init_opt_state, params)
+        opt = jax.tree.map(
+            lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=repl),
+            opt_shape)
+        state = TrainState(params=params, opt=opt)
+        bsh = NamedSharding(mesh, P(("data", "model"), None))
+        batch = {k: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=bsh)
+                 for k, l in model.make_input_specs(shape).items()}
+        step_fn = make_train_step(model, TrainConfig())
+        lw = jax.jit(step_fn, donate_argnums=(0,)).lower(state, batch)
+        rec = measure(lw)
+        # probes: depth-extrapolated terms under the same layout
+        probes = {}
+        for u in (1, 2):
+            cfg_u = dryrun.analysis_config(cfg, shape, u)
+            model_u = build_model(cfg_u)
+            pshape_u = jax.eval_shape(model_u.init_params,
+                                      jax.random.PRNGKey(0))
+            params_u = jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                               sharding=repl), pshape_u)
+            opt_u = jax.tree.map(
+                lambda l: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                               sharding=repl),
+                jax.eval_shape(opt_lib.init_opt_state, params_u))
+            st_u = TrainState(params=params_u, opt=opt_u)
+            fn_u = make_train_step(model_u, TrainConfig())
+            cm = jax.jit(fn_u).lower(st_u, batch).compile()
+            ca = cm.cost_analysis()
+            if isinstance(ca, list):
+                ca = ca[0]
+            pc = rl.parse_collectives(cm.as_text())
+            probes[u] = (float(ca.get("flops", 0)),
+                         float(ca.get("bytes accessed", 0)), pc.moved_bytes)
+        units = dryrun.depth_units_of(cfg)
+        f, b, c = (probes[1][i] + (units - 1)
+                   * (probes[2][i] - probes[1][i]) for i in range(3))
+        rec["terms"] = {"flops": f, "bytes": b, "coll": c,
+                        "compute_s": f / rl.PEAK_FLOPS,
+                        "memory_s": b / rl.HBM_BW,
+                        "collective_s": c / rl.ICI_BW}
+        log("mamba2-130m/train_4k/B2_pure_dp", rec)
+
+
+
+def mamba2_hybrid_dp(name="B3_dp_blocks_sharded_head"):
+    """B3: B2 showed pure DP kills the collective term (1.43s -> 0.018s)
+    but the replicated vocab head inflates the memory term (1.54 -> 4.29s).
+    Hypothesis: keep ONLY embed/lm_head model-sharded (vocab 50432 -> 3152
+    per chip) and replicate the tiny mamba blocks; batch over data only so
+    the logits CE stays sharded in both vocab and batch. Expect memory_s
+    back near baseline with collective_s staying ~two orders below it."""
+    from repro.models import build_model
+    from repro.train.trainer import TrainState, make_train_step
+    from repro.train import optimizer as opt_lib
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    cfg = get_config("mamba2-130m")
+    shape = SHAPES["train_4k"]
+    mesh = make_production_mesh()
+
+    def pspec_for(path, leaf):
+        names = [str(getattr(k, "key", k)) for k in path]
+        if names and names[-1] == "embed":
+            return NamedSharding(mesh, P("model", None))
+        if names and names[-1] == "lm_head":
+            return NamedSharding(mesh, P(None, "model"))
+        return NamedSharding(mesh, P())
+
+    def lower_for(cfg_x):
+        model = build_model(cfg_x)
+        pshape = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+        params = jax.tree_util.tree_map_with_path(
+            lambda p, l: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                              sharding=pspec_for(p, l)),
+            pshape)
+        opt_shape = jax.eval_shape(opt_lib.init_opt_state, params)
+        opt = jax.tree_util.tree_map_with_path(
+            lambda p, l: jax.ShapeDtypeStruct(
+                l.shape, l.dtype, sharding=pspec_for(p[1:], l)),
+            opt_shape)
+        state = TrainState(params=params, opt=opt)
+        bsh = NamedSharding(mesh, P("data", None))
+        batch = {k: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=bsh)
+                 for k, l in build_model(cfg_x).make_input_specs(
+                     shape).items()}
+        return jax.jit(make_train_step(build_model(cfg_x), TrainConfig()),
+                       donate_argnums=(0,)).lower(state, batch)
+
+    with jax.set_mesh(mesh):
+        rec = measure(lower_for(cfg))
+        probes = {}
+        for u in (1, 2):
+            cm = lower_for(dryrun.analysis_config(cfg, shape, u)).compile()
+            ca = cm.cost_analysis()
+            if isinstance(ca, list):
+                ca = ca[0]
+            pc = rl.parse_collectives(cm.as_text())
+            probes[u] = (float(ca.get("flops", 0)),
+                         float(ca.get("bytes accessed", 0)), pc.moved_bytes)
+        units = dryrun.depth_units_of(cfg)
+        f, b, c = (probes[1][i] + (units - 1)
+                   * (probes[2][i] - probes[1][i]) for i in range(3))
+        rec["terms"] = {"flops": f, "bytes": b, "coll": c,
+                        "compute_s": f / rl.PEAK_FLOPS,
+                        "memory_s": b / rl.HBM_BW,
+                        "collective_s": c / rl.ICI_BW}
+        log(f"mamba2-130m/train_4k/{name}", rec)
+
+
+
+def deepseek_flat_fsdp(name="A6_flat_fsdp_no_tp"):
+    """A6: baseline TP(16)+FSDP(16) pays per-layer param all-gathers AND
+    per-layer activation all-reduces. Napkin math: pure 256-way FSDP
+    (params dim0 over data x model jointly, no TP) keeps the param
+    all-gather (~1.4GB/layer x 3 passes) but deletes the TP activation
+    all-reduces; predicted collective ~= 95*3*1.38GB*(255/256)/50GB/s
+    ~ 7.9s vs 78.7s baseline. Memory: params 0.5GB/dev + full-vocab logits
+    (chunked CE would bound it; measured below)."""
+    from repro.models import build_model
+    from repro.train.trainer import TrainState, make_train_step
+    from repro.train import optimizer as opt_lib
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    cfg = get_config("deepseek-67b")
+    shape = SHAPES["train_4k"]
+    mesh = make_production_mesh()
+
+    def pspec_for(path, leaf):
+        # flat FSDP: shard the largest dim over BOTH axes when divisible
+        for dim in range(len(leaf.shape) - 2, len(leaf.shape)):
+            if dim >= 0 and leaf.shape[dim] % 256 == 0 \
+                    and leaf.shape[dim] >= 4096:
+                spec = [None] * len(leaf.shape)
+                spec[dim] = ("data", "model")
+                return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+
+    def lower_for(cfg_x, tcfg=None):
+        model = build_model(cfg_x)
+        pshape = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+        params = jax.tree_util.tree_map_with_path(
+            lambda p, l: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                              sharding=pspec_for(p, l)),
+            pshape)
+        opt_shape = jax.eval_shape(opt_lib.init_opt_state, params)
+        opt = jax.tree_util.tree_map_with_path(
+            lambda p, l: jax.ShapeDtypeStruct(
+                l.shape, l.dtype, sharding=pspec_for(p[1:], l)),
+            opt_shape)
+        state = TrainState(params=params, opt=opt)
+        # 256-way pure DP: batch over BOTH axes so every chip computes
+        bsh = NamedSharding(mesh, P(("data", "model"), None))
+        batch = {k: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=bsh)
+                 for k, l in model.make_input_specs(shape).items()}
+        return jax.jit(make_train_step(model, tcfg or TrainConfig(
+            microbatch=16)), donate_argnums=(0,)).lower(state, batch)
+
+    from repro.models import pspec
+    pspec.DP_INCLUDE_MODEL = True
+    with jax.set_mesh(mesh):
+        rec = measure(lower_for(cfg))
+        probes = {}
+        for u in (1, 2):
+            cm = lower_for(dryrun.analysis_config(cfg, shape, u),
+                           tcfg=TrainConfig()).compile()
+            ca = cm.cost_analysis()
+            if isinstance(ca, list):
+                ca = ca[0]
+            pc = rl.parse_collectives(cm.as_text())
+            probes[u] = (float(ca.get("flops", 0)),
+                         float(ca.get("bytes accessed", 0)), pc.moved_bytes)
+        units = dryrun.depth_units_of(cfg)
+        f, b, c = (probes[1][i] + (units - 1)
+                   * (probes[2][i] - probes[1][i]) for i in range(3))
+        rec["terms"] = {"flops": f, "bytes": b, "coll": c,
+                        "compute_s": f / rl.PEAK_FLOPS,
+                        "memory_s": b / rl.HBM_BW,
+                        "collective_s": c / rl.ICI_BW}
+        log(f"deepseek-67b/train_4k/{name}", rec)
+    pspec.DP_INCLUDE_MODEL = False
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,110 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""§Perf extra cell E: MoE expert parallelism vs tensor parallelism
+(mixtral-8x7b train_4k).
+
+Baseline (grid): experts replicated across `model`, each expert's FFN
+hidden dim TP-sharded 16-way. EP variant: the 256 chips are re-arranged as
+(data=16, expert=8, tp=2) — expert weights shard their expert dim over
+`expert` and FFN dim 2-way over `tp`; the scatter dispatch then implies an
+all-to-all of tokens to expert-owning shards instead of replicating every
+expert's weights 16x.
+
+Napkin: TP layout moves activations through 2 all-reduces per MoE layer
+(bf16 (tokens_local, d) = 16*4096*4096*2B = 0.5GB each) but zero expert
+weight traffic; EP moves each routed token twice over the all-to-all
+((tokens_local * 2/8 per peer) ~ 0.25GB) — EP should cut the MoE-layer
+collective bytes roughly in half and drop per-chip expert weight memory 8x.
+"""
+
+import json          # noqa: E402
+import time          # noqa: E402
+
+import jax           # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro.analysis import roofline as rl                    # noqa: E402
+from repro.configs import SHAPES, TrainConfig, get_config    # noqa: E402
+from repro.launch import dryrun                              # noqa: E402
+from repro.models import build_model                         # noqa: E402
+from repro.train import optimizer as opt_lib                 # noqa: E402
+from repro.train.trainer import TrainState, make_train_step  # noqa: E402
+from benchmarks.perf_iterations import log, measure          # noqa: E402
+
+
+def make_ep_mesh():
+    return jax.make_mesh(
+        (16, 8, 2), ("data", "expert", "tp"),
+        axis_types=(jax.sharding.AxisType.Auto,) * 3)
+
+
+def lower_ep(cfg, shape):
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    mesh = make_ep_mesh()
+    model = build_model(cfg)
+
+    def pspec_for(path, leaf):
+        names = [str(getattr(k, "key", k)) for k in path]
+        name = names[-1] if names else ""
+        if name in ("w_gate", "w_up", "w_down") and len(leaf.shape) == 4:
+            # (L, E, a, b): experts over `expert`, last dim over `tp`
+            return NamedSharding(
+                mesh, P(None, "expert", None,
+                        "tp" if leaf.shape[-1] % 2 == 0 else None))
+        if name == "embed":
+            return NamedSharding(mesh, P(("expert", "tp"), None))
+        if len(leaf.shape) >= 2 and leaf.shape[-1] % 16 == 0 \
+                and leaf.shape[-1] >= 1024:
+            spec = [None] * len(leaf.shape)
+            spec[-1] = ("expert", "tp")
+            return NamedSharding(mesh, P(*spec))
+        return NamedSharding(mesh, P())
+
+    with jax.set_mesh(mesh):
+        pshape = jax.eval_shape(model.init_params, jax.random.PRNGKey(0))
+        params = jax.tree_util.tree_map_with_path(
+            lambda p, l: jax.ShapeDtypeStruct(l.shape, l.dtype,
+                                              sharding=pspec_for(p, l)),
+            pshape)
+        opt_shape = jax.eval_shape(opt_lib.init_opt_state, params)
+        opt = jax.tree_util.tree_map_with_path(
+            lambda p, l: jax.ShapeDtypeStruct(
+                l.shape, l.dtype, sharding=pspec_for(p[1:], l)), opt_shape)
+        state = TrainState(params=params, opt=opt)
+        bsh = NamedSharding(mesh, P("data", None))
+        batch = {k: jax.ShapeDtypeStruct(l.shape, l.dtype, sharding=bsh)
+                 for k, l in model.make_input_specs(shape).items()}
+        step_fn = make_train_step(model, TrainConfig())
+        return jax.jit(step_fn, donate_argnums=(0,)).lower(state, batch)
+
+
+def terms_ep(cfg, shape):
+    probes = {}
+    for u in (1, 2):
+        cm = lower_ep(dryrun.analysis_config(cfg, shape, u), shape).compile()
+        ca = cm.cost_analysis()
+        if isinstance(ca, list):
+            ca = ca[0]
+        pc = rl.parse_collectives(cm.as_text())
+        probes[u] = (float(ca.get("flops", 0)),
+                     float(ca.get("bytes accessed", 0)), pc.moved_bytes)
+    units = cfg.n_layers
+    f, b, c = (probes[1][i] + (units - 1) * (probes[2][i] - probes[1][i])
+               for i in range(3))
+    return {"flops": f, "bytes": b, "coll": c,
+            "compute_s": f / rl.PEAK_FLOPS, "memory_s": b / rl.HBM_BW,
+            "collective_s": c / rl.ICI_BW}
+
+
+def main():
+    cfg = get_config("mixtral-8x7b")
+    shape = SHAPES["train_4k"]
+    lw = lower_ep(cfg, shape)
+    rec = measure(lw)
+    rec["terms"] = terms_ep(cfg, shape)
+    log("mixtral-8x7b/train_4k/E1_expert_parallel", rec)
+
+
+if __name__ == "__main__":
+    main()

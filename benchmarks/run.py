@@ -1,0 +1,33 @@
+"""Benchmark harness: one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV. A full run on the CPU container
+takes a few minutes; individual benches: ``--only efficiency`` etc.
+"""
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="all",
+                    choices=["all", "efficiency", "selection_f1",
+                             "selection_real", "kernels"])
+    args = ap.parse_args()
+
+    from . import (bench_efficiency, bench_kernels, bench_selection_f1,
+                   bench_selection_real)
+    benches = {
+        "efficiency": bench_efficiency.run,       # paper Fig. 1 + App. D.1
+        "selection_f1": bench_selection_f1.run,   # paper Fig. 2
+        "selection_real": bench_selection_real.run,  # paper Figs. 3/4
+        "kernels": bench_kernels.run,             # Cor. 3.3 machinery
+    }
+    print("name,us_per_call,derived")
+    for key, fn in benches.items():
+        if args.only not in ("all", key):
+            continue
+        for name, us, derived in fn():
+            print(f"{name},{us:.1f},{derived}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

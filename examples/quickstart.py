@@ -1,0 +1,45 @@
+"""Quickstart: FastSurvival CPH training in ~40 lines.
+
+Generates the paper's Appendix-C synthetic data, fits the CPH model with
+the quadratic- and cubic-surrogate coordinate descent, compares against the
+Newton baselines on the same objective, and evaluates CIndex/F1.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import cox, solvers
+from repro.data.synthetic import SyntheticSpec, make_correlated_survival
+from repro.survival import metrics
+
+
+def main():
+    spec = SyntheticSpec(n=1000, p=100, k=8, rho=0.7, seed=0)
+    x, t, delta, beta_star = make_correlated_survival(spec)
+    data = cox.prepare(x, t, delta)
+    print(f"n={spec.n} p={spec.p} events={int(delta.sum())}")
+
+    results = {}
+    for method in ("cd_quad", "cd_cubic", "quasi_newton", "prox_newton",
+                   "newton_ls", "gd"):
+        res = solvers.SOLVERS[method](data, 0.0, 1.0, 60)
+        obj = np.asarray(res.objective)
+        results[method] = res
+        mono = "monotone" if np.all(np.diff(obj) <= 1e-7) else "NON-MONOTONE"
+        print(f"{method:>14}: final objective {obj[-1]:.6f}  [{mono}]")
+
+    beta = np.asarray(results["cd_quad"].beta)
+    risk = x @ beta
+    ci = metrics.cindex(t, delta, risk)
+    print(f"\ncd_quad: CIndex {ci:.4f}")
+
+    # l1-regularized sparse fit
+    res = solvers.fit_cd(data, lam1=5.0, lam2=1.0, n_iters=100)
+    b = np.asarray(res.beta)
+    p_, r_, f1 = metrics.support_f1(beta_star, b)
+    print(f"l1 fit: support {int((np.abs(b) > 1e-8).sum())}, "
+          f"F1 vs true support {f1:.3f}")
+
+
+if __name__ == "__main__":
+    main()

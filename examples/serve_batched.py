@@ -1,0 +1,10 @@
+"""Batched serving example: continuous batched prefill+decode over a
+request queue on a reduced Mixtral (MoE + sliding-window rolling cache).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(["--arch", "mixtral-8x7b", "--reduced", "--requests", "8",
+          "--prompt-len", "20", "--max-new", "12"])

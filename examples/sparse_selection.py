@@ -1,0 +1,39 @@
+"""Cardinality-constrained variable selection (paper Fig. 2 regime).
+
+Beam-search CD on highly correlated synthetic data (rho = 0.9) versus the
+L1 path and a gradient-scored greedy OMP baseline; reports F1 per support
+size and shows ours dominating under correlation.
+
+    PYTHONPATH=src python examples/sparse_selection.py
+"""
+import numpy as np
+
+from repro.core import beam, cox, path
+from repro.data.synthetic import SyntheticSpec, make_correlated_survival
+from repro.survival import metrics
+
+
+def main():
+    spec = SyntheticSpec(n=600, p=120, k=6, rho=0.9, seed=3)
+    x, t, delta, beta_star = make_correlated_survival(spec)
+    data = cox.prepare(x, t, delta)
+    k_true = int((beta_star != 0).sum())
+    print(f"n={spec.n} p={spec.p} rho={spec.rho} true support={k_true}")
+
+    res_beam = beam.beam_search(data, k=k_true + 2, beam_width=5, n_expand=8)
+    res_omp = beam.omp_greedy(data, k=k_true + 2)
+    res_l1 = path.l1_path(data, n_lambdas=20, lambda_min_ratio=0.02)
+
+    print("\nsupport size | beam F1 | omp F1 | best-l1 F1")
+    for k in range(1, k_true + 3):
+        _, _, f_b = metrics.support_f1(beta_star, res_beam.betas[k - 1])
+        _, _, f_o = metrics.support_f1(beta_star, res_omp.betas[k - 1])
+        f_l = 0.0
+        for b, s in zip(res_l1.betas, res_l1.support_sizes):
+            if s == k:
+                f_l = max(f_l, metrics.support_f1(beta_star, b)[2])
+        print(f"{k:12d} | {f_b:7.3f} | {f_o:6.3f} | {f_l:10.3f}")
+
+
+if __name__ == "__main__":
+    main()

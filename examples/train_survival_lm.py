@@ -1,0 +1,91 @@
+"""End-to-end driver: train a ~100M-parameter Mamba2 backbone with the
+paper's CPH objective (deep survival head) for a few hundred steps, then
+beam-search a sparse interpretable head on the frozen features.
+
+Default runs a CPU-sized variant; pass --full for the ~100M config
+(mamba2-130m at 12 layers; a few hundred steps is hours on 1 CPU core,
+minutes on accelerators — the step function is the same one the dry-run
+lowers at pod scale).
+
+    PYTHONPATH=src python examples/train_survival_lm.py --steps 200
+"""
+import argparse
+
+import jax
+import numpy as np
+
+from repro.configs import get_config, reduced_config
+from repro.data.pipeline import SurvivalTextStream
+from repro.launch.mesh import make_host_mesh
+from repro.models import build_model
+from repro.survival import metrics
+from repro.survival.head import init_cox_head, pooled_features, sparse_refit
+from repro.configs.base import TrainConfig
+from repro.train.optimizer import init_opt_state
+from repro.train.trainer import TrainState, make_train_step
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=150)
+    ap.add_argument("--batch", type=int, default=32)
+    ap.add_argument("--seq", type=int, default=48)
+    ap.add_argument("--full", action="store_true",
+                    help="~100M-param config instead of the CPU-sized one")
+    args = ap.parse_args(argv)
+
+    cfg = get_config("mamba2-130m")
+    cfg = cfg.scaled(n_layers=12, vocab_size=2048) if args.full else \
+        reduced_config(cfg).scaled(n_layers=4, d_model=128,
+                                   vocab_size=512, ssm_state=32)
+    model = build_model(cfg)
+    n_params = sum(np.prod(x.shape) for x in jax.tree.leaves(
+        jax.eval_shape(model.init_params, jax.random.PRNGKey(0))))
+    print(f"[driver] arch=mamba2 family=ssm params={n_params/1e6:.1f}M "
+          f"objective=cox")
+
+    params = model.init_params(jax.random.PRNGKey(0))
+    params["cox_head"] = init_cox_head(jax.random.PRNGKey(1), cfg.d_model)
+    state = TrainState(params=params, opt=init_opt_state(params))
+    tcfg = TrainConfig(learning_rate=2e-3, warmup_steps=20,
+                       total_steps=args.steps)
+    step_fn = jax.jit(make_train_step(model, tcfg, objective="cox"))
+    stream = SurvivalTextStream(cfg.vocab_size, args.seq, args.batch, seed=0)
+
+    losses = []
+    for step in range(args.steps):
+        state, m = step_fn(state, stream.batch_for_step(step))
+        losses.append(float(m["loss"]))
+        if step % 25 == 0:
+            print(f"[driver] step {step} cox-nll {losses[-1]:.4f}")
+    print(f"[driver] nll first10 {np.mean(losses[:10]):.4f} -> "
+          f"last10 {np.mean(losses[-10:]):.4f}")
+
+    # evaluation: CIndex of the learned risk on held-out batches
+    feats, times, events, risks = [], [], [], []
+    risk_fn = jax.jit(lambda p, b: model.risk_scores(p, b)[0])
+    feat_fn = jax.jit(lambda p, b: pooled_features(model, p, b))
+    for step in range(args.steps, args.steps + 4):
+        b = stream.batch_for_step(step)
+        risks.append(np.asarray(risk_fn(state.params, b)))
+        feats.append(np.asarray(feat_fn(state.params, b)))
+        times.append(b["time"])
+        events.append(b["event"])
+    t = np.concatenate(times)
+    e = np.concatenate(events)
+    ci = metrics.cindex(t, e, np.concatenate(risks))
+    print(f"[driver] held-out CIndex {ci:.4f} "
+          f"(0.5 = random, higher is better)")
+
+    # the paper's technique as the final-layer trainer: sparse refit
+    f = np.concatenate(feats)
+    res = sparse_refit(f, t, e, k=min(8, cfg.d_model // 4))
+    risk_sparse = f @ res.betas[-1]
+    ci_s = metrics.cindex(t, e, risk_sparse)
+    nz = int((np.abs(res.betas[-1]) > 1e-8).sum())
+    print(f"[driver] beam-search sparse head: {nz} of {cfg.d_model} "
+          f"features, CIndex {ci_s:.4f}")
+
+
+if __name__ == "__main__":
+    main()

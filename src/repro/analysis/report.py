@@ -1,0 +1,85 @@
+"""Build the EXPERIMENTS.md §Dry-run / §Roofline tables from the
+dryrun_results JSONs.
+
+    PYTHONPATH=src python -m repro.analysis.report [--dir ...]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def fmt_s(x):
+    return f"{x:.2e}"
+
+
+def load(d):
+    recs = []
+    for p in sorted(glob.glob(os.path.join(d, "*.json"))):
+        with open(p) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def dryrun_table(recs, mesh):
+    rows = ["| arch | shape | status | compile s | args GB/dev | temp GB/dev"
+            " | coll ops |",
+            "|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["mesh"] != mesh:
+            continue
+        if r["status"] == "ok":
+            ma = r.get("memory_analysis", {})
+            args = ma.get("argument_size_in_bytes", 0) / 2**30
+            temp = ma.get("temp_size_in_bytes", 0) / 2**30
+            nops = r.get("collectives", {}).get("n_ops", 0)
+            rows.append(f"| {r['arch']} | {r['shape']} | ok "
+                        f"| {r.get('compile_s','-')} | {args:.2f} "
+                        f"| {temp:.2f} | {int(nops)} |")
+        else:
+            reason = r.get("reason", "error")
+            rows.append(f"| {r['arch']} | {r['shape']} | {r['status']}: "
+                        f"{reason} | - | - | - | - |")
+    return "\n".join(rows)
+
+
+def roofline_table(recs):
+    rows = ["| arch | shape | compute s | memory s | collective s | "
+            "bottleneck | useful/compiled flops | roofline frac |",
+            "|---|---|---|---|---|---|---|---|"]
+    for r in recs:
+        if r["mesh"] != "pod16x16" or r["status"] != "ok":
+            continue
+        ro = r["roofline"]
+        dom = max(ro["compute_s"], ro["memory_s"], ro["collective_s"])
+        # fraction of roofline: ideal time (compute term at 100% useful
+        # flops) over the dominating term
+        ideal = ro["model_flops"] / 197e12
+        frac = ideal / dom if dom > 0 else 0.0
+        rows.append(
+            f"| {r['arch']} | {r['shape']} | {fmt_s(ro['compute_s'])} "
+            f"| {fmt_s(ro['memory_s'])} | {fmt_s(ro['collective_s'])} "
+            f"| {ro['bottleneck']} | {ro['useful_flops_ratio']:.2f} "
+            f"| {frac:.3f} |")
+    return "\n".join(rows)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "benchmarks",
+        "dryrun_results"))
+    args = ap.parse_args()
+    recs = load(args.dir)
+    print("## Dry-run (single pod 16x16)\n")
+    print(dryrun_table(recs, "pod16x16"))
+    print("\n## Dry-run (multi-pod 2x16x16)\n")
+    print(dryrun_table(recs, "pod2x16x16"))
+    print("\n## Roofline (single pod, per step)\n")
+    print(roofline_table(recs))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,183 @@
+"""Three-term roofline model from a compiled dry-run artifact.
+
+    compute term    = HLO_FLOPs / (chips * peak_FLOP/s)
+    memory term     = HLO_bytes / (chips * HBM_bw)
+    collective term = sum over collective ops of per-device bytes moved
+                      over the slowest link they traverse
+
+Hardware constants: TPU v5e — 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+ICI (per the harness spec); cross-pod (the `pod` axis) goes over DCN at an
+assumed 25 GB/s per host aggregate.
+
+FLOPs/bytes come from ``compiled.cost_analysis()``. Collective bytes are
+NOT in cost_analysis: we parse the post-SPMD HLO text and sum operand sizes
+of every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, applying the standard ring-algorithm byte multipliers:
+
+    all-reduce:      2 * size * (n-1)/n        (reduce-scatter + all-gather)
+    all-gather:      size_out * (n-1)/n
+    reduce-scatter:  size_in * (n-1)/n  (~= size_out * (n-1))
+    all-to-all:      size * (n-1)/n
+    collective-permute: size
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from typing import Dict, List, Optional
+
+PEAK_FLOPS = 197e12          # bf16 / chip
+HBM_BW = 819e9               # bytes/s / chip
+ICI_BW = 50e9                # bytes/s / link (in-pod)
+DCN_BW = 25e9                # bytes/s / chip-pair aggregate (cross-pod)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+_COLL_RE = re.compile(
+    r"^\s*(?:%|ROOT\s+%?)?[\w.\-]+\s*=\s*(\([^=]*\)|\S+)\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(",
+    re.M)
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    op_bytes: Dict[str, float]         # logical output bytes by op kind
+    moved_bytes: float                 # ring-model per-device bytes moved
+    n_ops: int
+
+    def to_json(self):
+        return dataclasses.asdict(self)
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    op_bytes: Dict[str, float] = {}
+    moved = 0.0
+    n_ops = 0
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.match(line)
+        if not m:
+            continue
+        if "-done(" in line:
+            continue  # count the -start, skip its completion marker
+        shape_str, kind = m.group(1), m.group(2)
+        size = _shape_bytes(shape_str)
+        g = _GROUPS_RE.search(line)
+        if g:
+            n = len(g.group(1).split(","))
+        else:
+            gi = _GROUPS_IOTA_RE.search(line)
+            n = int(gi.group(2)) if gi else 2
+        n = max(n, 2)
+        if kind == "all-reduce":
+            b = 2.0 * size * (n - 1) / n
+        elif kind == "all-gather":
+            b = size * (n - 1) / n           # size = gathered output
+        elif kind == "reduce-scatter":
+            b = size * (n - 1)               # size = scattered output shard
+        elif kind == "all-to-all":
+            b = size * (n - 1) / n
+        else:                                 # collective-permute
+            b = size
+        op_bytes[kind] = op_bytes.get(kind, 0.0) + size
+        moved += b
+        n_ops += 1
+    return CollectiveStats(op_bytes=op_bytes, moved_bytes=moved, n_ops=n_ops)
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes: float
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bottleneck: str
+    model_flops: float           # 6*N*D useful flops (per device share)
+    useful_flops_ratio: float
+
+    def to_json(self):
+        return dataclasses.asdict(self)
+
+
+def compute_roofline(flops: float, bytes_accessed: float,
+                     coll: CollectiveStats, n_devices: int,
+                     model_flops_global: float,
+                     link_bw: float = ICI_BW) -> Roofline:
+    """All inputs per-device except model_flops_global (whole step)."""
+    compute_s = flops / PEAK_FLOPS
+    memory_s = bytes_accessed / HBM_BW
+    collective_s = coll.moved_bytes / link_bw
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bottleneck = max(terms, key=terms.get)
+    mf = model_flops_global / n_devices
+    return Roofline(
+        flops_per_device=flops, bytes_per_device=bytes_accessed,
+        collective_bytes=coll.moved_bytes, compute_s=compute_s,
+        memory_s=memory_s, collective_s=collective_s, bottleneck=bottleneck,
+        model_flops=mf,
+        useful_flops_ratio=(mf / flops) if flops else 0.0)
+
+
+def model_flops_for(cfg, shape, n_params_active: int) -> float:
+    """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference) with N = active
+    params; D = tokens processed this step."""
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_params_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_params_active * tokens
+    return 2.0 * n_params_active * shape.global_batch  # decode: 1 tok/seq
+
+
+def active_params(cfg) -> int:
+    """Active (per-token) parameter count — MoE counts top-k experts only."""
+    d, ff, L = cfg.d_model, cfg.d_ff, cfg.n_layers
+    hd, h, kh = cfg.head_dim, cfg.n_heads, cfg.n_kv_heads
+    attn = d * hd * (h + 2 * kh) + h * hd * d
+    if cfg.family in ("ssm", "hybrid"):
+        d_in = cfg.ssm_expand * d
+        nh = d_in // cfg.ssm_head_dim
+        conv_c = d_in + 2 * cfg.ssm_state
+        m = (d * (2 * d_in + 2 * cfg.ssm_state + nh)   # in_proj
+             + 4 * conv_c + d_in * d)                  # conv + out_proj
+        per_layer = m
+        total = L * per_layer
+        if cfg.family == "hybrid":
+            shared = attn + 3 * d * ff
+            total += (L // cfg.shared_attn_every) * shared
+    elif cfg.n_experts > 0:
+        ffn = cfg.n_experts_per_tok * 3 * d * ff + d * cfg.n_experts
+        total = L * (attn + ffn)
+    else:
+        total = L * (attn + 3 * d * ff)
+        if cfg.family == "encdec":
+            total += cfg.encoder_layers * (attn + 3 * d * ff) \
+                + L * (attn)  # cross attention
+    total += cfg.vocab_padded * d * (1 if cfg.tie_embeddings else 2)
+    return int(total)

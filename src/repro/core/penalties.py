@@ -1,0 +1,78 @@
+"""Nonconvex separable penalties for the surrogate CD framework:
+SCAD (Fan & Li 2001) and MCP (Zhang 2010) — the extensions §3.5 of the
+paper names next to LASSO/ElasticNet.
+
+For the quadratic surrogate  a·D + ½ b·D² + pen(|c + D|)  the coordinate
+update is the penalty's scalar proximal operator evaluated at the Newton
+point z = c − a/b with weight 1/b; both SCAD and MCP have closed forms
+when b is large enough (we guard the nonconvex branch by clamping the
+effective curvature), so the CD sweep stays analytic exactly as in the
+l1 case.
+
+prox derivations (threshold lam, curvature w = 1/b):
+  MCP  (gamma > 1):  |z| <= lam w          -> 0
+                     |z| <= gamma lam      -> soft(z, lam w)/(1 - w/gamma)
+                     else                  -> z
+  SCAD (gamma > 2):  |z| <= lam (1 + w)    -> soft(z, lam w)
+                     |z| <= gamma lam      -> soft(z, gamma lam w/(gamma-1))
+                                              / (1 - w/(gamma-1))
+                     else                  -> z
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+_EPS = 1e-12
+
+
+def _soft(z, t):
+    return jnp.sign(z) * jnp.maximum(jnp.abs(z) - t, 0.0)
+
+
+def mcp_value(beta: Array, lam: float, gamma: float = 3.0) -> Array:
+    a = jnp.abs(beta)
+    quad = lam * a - a * a / (2.0 * gamma)
+    flat = 0.5 * gamma * lam * lam
+    return jnp.sum(jnp.where(a <= gamma * lam, quad, flat))
+
+
+def scad_value(beta: Array, lam: float, gamma: float = 3.7) -> Array:
+    a = jnp.abs(beta)
+    lin = lam * a
+    quad = (2.0 * gamma * lam * a - a * a - lam * lam) / (2.0 * (gamma - 1.0))
+    flat = lam * lam * (gamma + 1.0) / 2.0
+    return jnp.sum(jnp.where(a <= lam, lin,
+                             jnp.where(a <= gamma * lam, quad, flat)))
+
+
+def mcp_prox(a: Array, b: Array, c: Array, lam: Array,
+             gamma: float = 3.0) -> Array:
+    """argmin_D a D + 1/2 b D^2 + MCP(|c + D|; lam, gamma) - returns D."""
+    b = jnp.maximum(b, _EPS)
+    w = 1.0 / b
+    z = c - a * w
+    az = jnp.abs(z)
+    denom = jnp.maximum(1.0 - w / gamma, 1e-3)  # guard: surrogate curvature
+    inner = _soft(z, lam * w) / denom
+    new = jnp.where(az <= gamma * lam, inner, z)
+    return new - c
+
+
+def scad_prox(a: Array, b: Array, c: Array, lam: Array,
+              gamma: float = 3.7) -> Array:
+    b = jnp.maximum(b, _EPS)
+    w = 1.0 / b
+    z = c - a * w
+    az = jnp.abs(z)
+    r1 = _soft(z, lam * w)
+    denom = jnp.maximum(1.0 - w / (gamma - 1.0), 1e-3)
+    r2 = _soft(z, gamma * lam * w / (gamma - 1.0)) / denom
+    new = jnp.where(az <= lam * (1.0 + w), r1,
+                    jnp.where(az <= gamma * lam, r2, z))
+    return new - c
+
+
+PROX = {"mcp": mcp_prox, "scad": scad_prox}
+VALUE = {"mcp": mcp_value, "scad": scad_value}

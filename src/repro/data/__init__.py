@@ -1,0 +1,5 @@
+from .synthetic import (  # noqa: F401
+    SyntheticSpec,
+    make_correlated_survival,
+    make_attrition_like,
+)

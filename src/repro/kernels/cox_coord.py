@@ -1,0 +1,121 @@
+"""Pallas TPU kernel: fused per-coordinate CPH derivatives (Theorem 3.1).
+
+One coordinate-descent touch needs, for a feature column x and current
+linear predictor eta (both time-sorted ascending, *strictly increasing
+times* — the tie-free fast path; ops.py falls back to the jnp reference
+when ties exist):
+
+    w    = exp(eta - eta_max)
+    s_r  = suffix_sum(w * x^r),  r = 0..order+1
+    g    = sum delta * (s1/s0 - x)
+    h    = sum delta * (s2/s0 - (s1/s0)^2)
+    c3   = sum delta * (s3/s0 + 2(s1/s0)^3 - 3(s2/s0)(s1/s0))
+
+On CPU this is 6+ passes over n; here it is one HBM pass: the grid walks
+row-blocks of the (nb, bs) reshaped arrays right-to-left, all moments are
+formed in VMEM, in-block suffix sums run on the MXU (lower-triangular ones
+matmul), and a (k,1) VMEM scratch carries cross-block totals. Outputs are
+(1,1) scalars accumulated across grid steps (legal: TPU grids execute
+sequentially and output blocks map to the same tile every step).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lower_tri(bs: int, dtype=jnp.float32):
+    """(P @ L)[., i] = sum_{j >= i} P[., j]  (suffix over the lane axis)."""
+    row = jax.lax.broadcasted_iota(jnp.int32, (bs, bs), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (bs, bs), 1)
+    return (row >= col).astype(dtype)
+
+
+def _make_kernel(order: int):
+    k = order + 2  # moments 0..order+1
+
+    def kernel(eta_max_ref, eta_ref, x_ref, d_ref, g_ref, h_ref, c3_ref,
+               carry_ref):
+        i = pl.program_id(0)
+
+        @pl.when(i == 0)
+        def _init():
+            carry_ref[...] = jnp.zeros_like(carry_ref)
+            g_ref[...] = jnp.zeros_like(g_ref)
+            h_ref[...] = jnp.zeros_like(h_ref)
+            c3_ref[...] = jnp.zeros_like(c3_ref)
+
+        e = eta_ref[...].astype(jnp.float32)   # (1, bs)
+        x = x_ref[...].astype(jnp.float32)
+        d = d_ref[...].astype(jnp.float32)
+        w = jnp.exp(e - eta_max_ref[0, 0])
+
+        rows = [w]
+        for _ in range(k - 1):
+            rows.append(rows[-1] * x)
+        p = jnp.concatenate(rows, axis=0)       # (k, bs)
+        bs = p.shape[1]
+        suff = jax.lax.dot_general(
+            p, _lower_tri(bs), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32) + carry_ref[...]
+        # padded tail rows have w == 0 -> s0 == 0; clamp so the delta-masked
+        # (d == 0) contributions stay finite instead of 0 * nan
+        s0 = jnp.maximum(suff[0:1], 1e-30)
+        m1 = suff[1:2] / s0
+        m2 = suff[2:3] / s0
+        g_ref[...] += jnp.sum(d * (m1 - x), axis=1, keepdims=True)
+        h_ref[...] += jnp.sum(d * (m2 - m1 * m1), axis=1, keepdims=True)
+        if order >= 3:
+            m3 = suff[3:4] / s0
+            c3_ref[...] += jnp.sum(
+                d * (m3 + 2.0 * m1**3 - 3.0 * m2 * m1), axis=1, keepdims=True)
+        carry_ref[...] = carry_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+
+    return kernel
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("order", "block", "interpret"))
+def cox_coord(eta: jax.Array, x: jax.Array, delta: jax.Array,
+              order: int = 2, block: int = 1024,
+              interpret: bool = True):
+    """Fused (g, h[, c3]) for one coordinate; n-length 1-D inputs, no ties."""
+    n = eta.shape[0]
+    nb = pl.cdiv(n, block)
+    pad = nb * block - n
+
+    def prep(v, fill=0.0):
+        v = jnp.pad(v, (0, pad), constant_values=fill) if pad else v
+        return v.reshape(nb, block)
+
+    # pad eta with -inf-ish so padded w == 0 (exp(-1e30 - max) underflows)
+    eta_max = jnp.max(eta).reshape(1, 1).astype(jnp.float32)
+    eta_p = prep(eta, fill=-1e30)
+    x_p = prep(x)
+    d_p = prep(delta)
+    k = order + 2
+
+    scalar = jax.ShapeDtypeStruct((1, 1), jnp.float32)
+    g, h, c3 = pl.pallas_call(
+        _make_kernel(order),
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, block), lambda i: (nb - 1 - i, 0)),
+            pl.BlockSpec((1, block), lambda i: (nb - 1 - i, 0)),
+            pl.BlockSpec((1, block), lambda i: (nb - 1 - i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+        ],
+        out_shape=[scalar, scalar, scalar],
+        scratch_shapes=[pltpu.VMEM((k, 1), jnp.float32)],
+        interpret=interpret,
+    )(eta_max, eta_p, x_p, d_p)
+    return g[0, 0], h[0, 0], c3[0, 0]

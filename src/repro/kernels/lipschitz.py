@@ -1,0 +1,91 @@
+"""Pallas TPU kernel: Theorem 3.4 Lipschitz constants in one pass.
+
+    L2_l = 1/4      sum_i delta_i (suffix_max_i(x_l) - suffix_min_i(x_l))^2
+    L3_l = 1/(6√3)  sum_i delta_i |range|^3
+
+Same decoupled-scan shape as revcumsum: the grid walks n-blocks
+right-to-left over an (n, m) feature panel; in-block suffix max/min run as
+log2(block_n) shift-and-max steps on the VPU (static shifts — no
+data-dependent gathers), a (2, m) VMEM carry holds the running extrema of
+everything to the right, and the delta-weighted reductions accumulate into
+(1, m) outputs. Tie-free path (risk set = own suffix), like cox_coord.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+INV_6_SQRT3 = float(1.0 / (6.0 * np.sqrt(3.0)))
+
+
+def _suffix_extreme(v, combine, fill):
+    """Suffix-scan along axis 0 of (bn, m) via log-depth doubling."""
+    bn = v.shape[0]
+    sh = 1
+    while sh < bn:
+        shifted = jnp.concatenate(
+            [v[sh:], jnp.full((sh, v.shape[1]), fill, v.dtype)], axis=0)
+        v = combine(v, shifted)
+        sh *= 2
+    return v
+
+
+def _kernel(x_ref, d_ref, l2_ref, l3_ref, carry_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        carry_ref[0:1, :] = jnp.full_like(carry_ref[0:1, :], -1e30)  # max
+        carry_ref[1:2, :] = jnp.full_like(carry_ref[1:2, :], 1e30)   # min
+        l2_ref[...] = jnp.zeros_like(l2_ref)
+        l3_ref[...] = jnp.zeros_like(l3_ref)
+
+    x = x_ref[...].astype(jnp.float32)          # (bn, m)
+    d = d_ref[...].astype(jnp.float32)          # (bn, 1)
+    smax = jnp.maximum(_suffix_extreme(x, jnp.maximum, -1e30),
+                       carry_ref[0:1, :])
+    smin = jnp.minimum(_suffix_extreme(x, jnp.minimum, 1e30),
+                       carry_ref[1:2, :])
+    rng = smax - smin
+    l2_ref[...] += 0.25 * jnp.sum(d * rng * rng, axis=0, keepdims=True)
+    l3_ref[...] += jnp.float32(INV_6_SQRT3) * jnp.sum(
+        d * rng * rng * rng, axis=0, keepdims=True)
+    carry_ref[0:1, :] = jnp.maximum(carry_ref[0:1, :],
+                                    jnp.max(x, axis=0, keepdims=True))
+    carry_ref[1:2, :] = jnp.minimum(carry_ref[1:2, :],
+                                    jnp.min(x, axis=0, keepdims=True))
+
+
+@functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
+def lipschitz(x: jax.Array, delta: jax.Array, block_n: int = 512,
+              interpret: bool = True):
+    """(L2 (m,), L3 (m,)) for a time-sorted tie-free (n, m) panel."""
+    n, m = x.shape
+    nb = pl.cdiv(n, block_n)
+    pad = nb * block_n - n
+    if pad:
+        # pad with values that can never extend the range and delta = 0
+        x = jnp.pad(x, ((0, pad), (0, 0)), constant_values=0.0)
+        delta = jnp.pad(delta, (0, pad))
+        # padded rows sit at the END (latest times): they'd corrupt the
+        # suffix extrema of real rows, so replicate the last real row
+        x = x.at[n:].set(x[n - 1])
+    out_spec = pl.BlockSpec((1, m), lambda i: (0, 0))
+    l2, l3 = pl.pallas_call(
+        _kernel,
+        grid=(nb,),
+        in_specs=[
+            pl.BlockSpec((block_n, m), lambda i: (nb - 1 - i, 0)),
+            pl.BlockSpec((block_n, 1), lambda i: (nb - 1 - i, 0)),
+        ],
+        out_specs=[out_spec, out_spec],
+        out_shape=[jax.ShapeDtypeStruct((1, m), jnp.float32)] * 2,
+        scratch_shapes=[pltpu.VMEM((2, m), jnp.float32)],
+        interpret=interpret,
+    )(x, delta.reshape(-1, 1))
+    return l2[0], l3[0]

@@ -1,0 +1,75 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+Selection logic:
+  * on TPU the compiled kernels run natively;
+  * elsewhere (this container) they run in interpret mode for correctness;
+  * data with tied event times falls back to the pure-jnp Breslow reference
+    (the kernels implement the tie-free fast path; ties need a gather at
+    risk_start which is not worth a TPU kernel — see kernels/cox_coord.py).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .cox_batch import cox_batch as _cox_batch_kernel
+from .cox_coord import cox_coord as _cox_coord_kernel
+from .revcumsum import revcumsum as _revcumsum_kernel
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def revcumsum(x: jax.Array, block_n: int = 512) -> jax.Array:
+    """Suffix sum along axis 0; accepts (n,) or (n, m)."""
+    squeeze = x.ndim == 1
+    x2 = x[:, None] if squeeze else x
+    out = _revcumsum_kernel(x2, block_n=block_n, interpret=_interpret())
+    return out[:, 0] if squeeze else out
+
+
+def cox_coord_grad_hess(eta: jax.Array, x: jax.Array, delta: jax.Array,
+                        order: int = 2, block: int = 1024):
+    """Fused per-coordinate (g, h) — tie-free fast path."""
+    g, h, _ = _cox_coord_kernel(eta, x, delta, order=order, block=block,
+                                interpret=_interpret())
+    return g, h
+
+
+def cox_coord_all(eta: jax.Array, x: jax.Array, delta: jax.Array,
+                  block: int = 1024):
+    """Fused per-coordinate (g, h, c3) including the third partial."""
+    return _cox_coord_kernel(eta, x, delta, order=3, block=block,
+                             interpret=_interpret())
+
+
+def cox_batch_grad_hess(eta: jax.Array, x: jax.Array, delta: jax.Array,
+                        block_n: int = 512, block_p: int = 256):
+    """All-coordinate (grad, hess_diag) — tie-free fast path.
+
+    Precomputes the O(n) vectors in jnp (one pass), then the O(np) panel
+    work runs in the kernel.
+    """
+    eta32 = eta.astype(jnp.float32)
+    d32 = delta.astype(jnp.float32)
+    w = jnp.exp(eta32 - jnp.max(eta32))
+    s0 = jax.lax.cumsum(w, axis=0, reverse=True)
+    inv_s0 = 1.0 / s0
+    a = jnp.cumsum(d32 * inv_s0)
+    wa = w * a
+    r = wa - d32
+    return _cox_batch_kernel(x, w, r, wa, d32, inv_s0,
+                             block_n=block_n, block_p=block_p,
+                             interpret=_interpret())
+
+
+def lipschitz_constants(x: jax.Array, delta: jax.Array,
+                        block_n: int = 512):
+    """(L2, L3) Theorem-3.4 constants — tie-free fast path."""
+    from .lipschitz import lipschitz as _lips_kernel
+
+    return _lips_kernel(x, delta, block_n=block_n, interpret=_interpret())

@@ -1,0 +1,131 @@
+"""PartitionSpec rules for params, optimizer state, batches, and caches.
+
+Policy (DESIGN.md §5):
+  * last dim of every >=2-D weight -> ``model`` (TP) when divisible;
+  * second-to-last dim -> ``data`` (FSDP/ZeRO-3 style) in *train* mode when
+    divisible — required to fit the 67B/141B archs' params+optimizer into
+    16 GB/chip; serving uses TP-only params (latency: no per-layer gather);
+  * token embeddings: vocab over ``model``;
+  * stacked-layer leading dims are never sharded;
+  * anything indivisible falls back to replication on that dim (e.g.
+    qwen1.5's 20 heads: the flattened 2560-wide QKV dim shards 16-way even
+    though 20 heads don't — XLA repartitions around the per-head reshape).
+
+Batches: batch dim over ("pod","data"); decode KV caches: batch over
+``data`` and the cache sequence dim over ``model`` (the flash-decode
+partition; kv-head counts in the pool are all < 16 so head-sharding the
+cache is not an option).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from . import mesh as mesh_lib
+
+
+def _axsize(mesh: Mesh, name: str) -> int:
+    return mesh.shape[name] if name in mesh.axis_names else 1
+
+
+def param_spec(path: tuple, shape: tuple, mesh: Mesh, mode: str = "train"):
+    names = [getattr(k, "key", getattr(k, "name", str(k))) for k in path]
+    name = names[-1] if names else ""
+    stacked = "layers" in names or "enc_layers" in names
+    msize = _axsize(mesh, "model")
+    dsize = _axsize(mesh, "data")
+    fsdp = mesh_lib.fsdp_axis(mesh) if mode == "train" else None
+
+    if name == "embed":
+        v_ax = "model" if shape[0] % msize == 0 else None
+        d_ax = fsdp if (fsdp and shape[1] % dsize == 0) else None
+        return P(v_ax, d_ax)
+
+    spec = [None] * len(shape)
+    if len(shape) >= 2:
+        # skip leading stack dims: only the trailing 2 dims are sharded;
+        # small leaves (norm scales, biases) stay replicated
+        last, second = len(shape) - 1, len(shape) - 2
+        if shape[last] % msize == 0 and shape[last] >= 1024:
+            spec[last] = "model"
+        if fsdp and shape[second] % dsize == 0 and shape[second] >= 1024 \
+                and (second > 0 or not stacked):
+            spec[second] = fsdp
+    elif len(shape) == 1:
+        if shape[0] % msize == 0 and shape[0] >= 4096:
+            spec[0] = "model"
+    return P(*spec)
+
+
+def param_shardings(params_shape: Any, mesh: Mesh, mode: str = "train"):
+    """Pytree of NamedShardings matching a params eval_shape pytree."""
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, param_spec(path, leaf.shape, mesh, mode)),
+        params_shape)
+
+
+def batch_spec(path: tuple, shape: tuple, mesh: Mesh):
+    dp = mesh_lib.dp_axes(mesh)
+    n_dp = 1
+    for a in dp:
+        n_dp *= mesh.shape[a]
+    name = getattr(path[-1], "key", "") if path else ""
+    if name == "positions" and len(shape) == 3:   # (3, B, S) M-RoPE
+        return P(None, dp if shape[1] % n_dp == 0 else None, None)
+    spec = [None] * len(shape)
+    if shape and shape[0] % n_dp == 0:
+        spec[0] = dp
+    return P(*spec)
+
+
+def batch_shardings(batch_specs: Any, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, batch_spec(path, leaf.shape, mesh)),
+        batch_specs)
+
+
+def cache_spec(path: tuple, shape: tuple, mesh: Mesh):
+    """Decode caches: (L, B, S, KH, hd) -> batch over data, seq over model
+    (flash-decode layout); SSM states (L, B, H, hd, N): batch over data,
+    heads over model when divisible."""
+    name = getattr(path[-1], "name", getattr(path[-1], "key", "")) if path \
+        else ""
+    msize = _axsize(mesh, "model")
+    dsize = _axsize(mesh, "data")
+    if name == "length":
+        return P(None)
+    spec = [None] * len(shape)
+    if len(shape) >= 2 and shape[1] % dsize == 0:
+        spec[1] = "data"
+    if name in ("k", "v", "xk", "xv") and len(shape) == 5:
+        if shape[2] % msize == 0:
+            spec[2] = "model"
+    elif name == "state" and len(shape) == 5:
+        if shape[2] % msize == 0:
+            spec[2] = "model"
+    elif name == "conv" and len(shape) == 4:
+        if shape[3] % msize == 0:
+            spec[3] = "model"
+    return P(*spec)
+
+
+def cache_shardings(cache_specs: Any, mesh: Mesh):
+    return jax.tree_util.tree_map_with_path(
+        lambda path, leaf: NamedSharding(
+            mesh, cache_spec(path, leaf.shape, mesh)),
+        cache_specs)
+
+
+def opt_spec(path: tuple, shape: tuple, mesh: Mesh):
+    """ZeRO-1: optimizer moments take the param spec (m/v shard with their
+    params; the fsdp dim already spreads them over data)."""
+    return param_spec(path, shape, mesh, mode="train")
+
+
+def replicated(mesh: Mesh):
+    return NamedSharding(mesh, P())

@@ -1,0 +1,1 @@
+from .model import build_model  # noqa: F401

@@ -1,0 +1,222 @@
+"""Shared transformer layers: RMSNorm, RoPE (incl. M-RoPE sections),
+grouped-query attention with optional QKV bias / sliding window / chunked
+streaming-softmax (flash-style, pure JAX), SwiGLU MLP.
+
+Everything is a pure function over explicit param pytrees (no flax offline);
+init_* functions return the param trees. Compute dtype is the input dtype
+(bf16 in production), accumulation fp32 where it matters.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def init_rmsnorm(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(params, x: Array, eps: float = 1e-6) -> Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(var + eps)).astype(dt) * params["scale"]
+
+
+# ---------------------------------------------------------------------------
+# Rotary embeddings (standard + multimodal sections)
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float = 1e4,
+               sections: Tuple[int, ...] = ()) -> Array:
+    """x: (B, S, H, hd). positions: (B, S) or (3, B, S) for M-RoPE.
+
+    M-RoPE (Qwen2-VL): the rotary frequency channels are split into
+    ``sections`` (t, h, w) groups; group g rotates by positions[g].
+    """
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)  # (hd/2,)
+    if positions.ndim == 2:
+        ang = positions[..., None].astype(jnp.float32) * freqs  # (B,S,hd/2)
+    else:
+        assert sections, "3-D positions need mrope sections"
+        secs = jnp.cumsum(jnp.asarray((0,) + tuple(sections)))
+        idx = jnp.arange(hd // 2)
+        group = jnp.searchsorted(secs[1:], idx, side="right")  # (hd/2,)
+        pos_g = positions[group]                   # (hd/2, B, S)
+        ang = jnp.moveaxis(pos_g, 0, -1).astype(jnp.float32) * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def init_attention(rng, d_model: int, n_heads: int, n_kv_heads: int,
+                   head_dim: int, qkv_bias: bool, dtype=jnp.bfloat16):
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    s = d_model ** -0.5
+    p = {
+        "wq": jax.random.normal(k1, (d_model, n_heads * head_dim), dtype) * s,
+        "wk": jax.random.normal(k2, (d_model, n_kv_heads * head_dim), dtype) * s,
+        "wv": jax.random.normal(k3, (d_model, n_kv_heads * head_dim), dtype) * s,
+        "wo": jax.random.normal(k4, (n_heads * head_dim, d_model), dtype) * s,
+    }
+    if qkv_bias:
+        p["bq"] = jnp.zeros((n_heads * head_dim,), dtype)
+        p["bk"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+        p["bv"] = jnp.zeros((n_kv_heads * head_dim,), dtype)
+    return p
+
+
+def qkv_project(params, x: Array, n_heads: int, n_kv_heads: int,
+                head_dim: int):
+    b, s, _ = x.shape
+    q = x @ params["wq"]
+    k = x @ params["wk"]
+    v = x @ params["wv"]
+    if "bq" in params:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    return (q.reshape(b, s, n_heads, head_dim),
+            k.reshape(b, s, n_kv_heads, head_dim),
+            v.reshape(b, s, n_kv_heads, head_dim))
+
+
+def flash_attention(q: Array, k: Array, v: Array, *, causal: bool = True,
+                    window: Array | int = -1, q_offset: Array | int = 0,
+                    q_chunk: int = 1024, kv_chunk: int = 1024,
+                    kv_len: Optional[Array] = None) -> Array:
+    """Chunked streaming-softmax attention (flash-style algorithm in pure
+    JAX/XLA — not a hand kernel; see DESIGN.md §6).
+
+    q: (B, Sq, H, hd); k, v: (B, Skv, KH, hd) with H = KH * G (GQA).
+    window: -1/0 => full; w > 0 => keys with qpos - kpos >= w are masked
+    (sliding window). May be a traced scalar (per-layer pattern arrays).
+    kv_len: optional (B,) valid KV length (decode/padded prefill).
+    Memory: O(q_chunk * kv_chunk) scores per step instead of O(Sq * Skv).
+    """
+    b, sq, h, hd = q.shape
+    skv, kh = k.shape[1], k.shape[2]
+    g = h // kh
+    scale = hd ** -0.5
+    window = jnp.asarray(window)
+    q_offset = jnp.asarray(q_offset)
+
+    nq = -(-sq // q_chunk)
+    pad_q = nq * q_chunk - sq
+    qp = jnp.pad(q, ((0, 0), (0, pad_q), (0, 0), (0, 0))) if pad_q else q
+    qp = qp.reshape(b, nq, q_chunk, kh, g, hd)
+
+    nk = -(-skv // kv_chunk)
+    pad_k = nk * kv_chunk - skv
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad_k), (0, 0), (0, 0)))
+    kp = k.reshape(b, nk, kv_chunk, kh, hd)
+    vp = v.reshape(b, nk, kv_chunk, kh, hd)
+
+    kpos_all = jnp.arange(nk * kv_chunk)
+    valid_k = kpos_all < (skv if kv_len is None else kv_len[:, None])
+    # (B?, nk*ck) -> (B, nk, ck)
+    valid_k = jnp.broadcast_to(valid_k, (b, nk * kv_chunk)) \
+        .reshape(b, nk, kv_chunk)
+
+    def q_block(args):
+        qi, iq = args  # (B, q_chunk, KH, G, hd), scalar index
+        qpos = iq * q_chunk + jnp.arange(q_chunk) + q_offset  # (cq,)
+
+        def kv_step(carry, inp):
+            m, l, acc = carry
+            kj, vj, vkj, jk = inp  # (B, ck, KH, hd), ..., (B, ck), scalar
+            kpos = jk * kv_chunk + jnp.arange(kv_chunk)
+            s_ = jnp.einsum("bqkgd,bckd->bqkgc", qi, kj,
+                            preferred_element_type=jnp.float32) * scale
+            mask = vkj[:, None, None, None, :]
+            if causal:
+                cm = kpos[None, :] <= qpos[:, None]  # (cq, ck)
+                wm = jnp.where(window > 0,
+                               qpos[:, None] - kpos[None, :] < window, True)
+                mask = mask & (cm & wm)[None, :, None, None, :]
+            s_ = jnp.where(mask, s_, -1e30)
+            m_new = jnp.maximum(m, s_.max(axis=-1))
+            p = jnp.exp(s_ - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bqkgc,bckd->bqkgd", p, vj,
+                preferred_element_type=jnp.float32)
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, q_chunk, kh, g), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((b, q_chunk, kh, g), jnp.float32)
+        a0 = jnp.zeros((b, q_chunk, kh, g, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, a0),
+            (jnp.moveaxis(kp, 1, 0), jnp.moveaxis(vp, 1, 0),
+             jnp.moveaxis(valid_k, 1, 0), jnp.arange(nk)))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    out = jax.lax.map(q_block, (jnp.moveaxis(qp, 1, 0), jnp.arange(nq)))
+    out = jnp.moveaxis(out, 0, 1).reshape(b, nq * q_chunk, h, hd)
+    return out[:, :sq].astype(q.dtype)
+
+
+def decode_attention(q: Array, k_cache: Array, v_cache: Array,
+                     cur_len: Array) -> Array:
+    """Single-position attention against a (B, S_max, KH, hd) cache.
+
+    q: (B, 1, H, hd). cur_len: (B,) number of valid cache entries (the new
+    token's K/V must already be written). Plain einsum: scores are (B,H,S),
+    tiny for one query.
+    """
+    b, _, h, hd = q.shape
+    kh = k_cache.shape[2]
+    g = h // kh
+    qg = q.reshape(b, 1, kh, g, hd)
+    s_ = jnp.einsum("bqkgd,bskd->bkgqs", qg, k_cache,
+                    preferred_element_type=jnp.float32) * hd ** -0.5
+    pos = jnp.arange(k_cache.shape[1])
+    mask = pos[None, :] < cur_len[:, None]  # (B, S)
+    s_ = jnp.where(mask[:, None, None, None, :], s_, -1e30)
+    p = jax.nn.softmax(s_, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", p, v_cache,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, 1, h, hd).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLP (SwiGLU)
+# ---------------------------------------------------------------------------
+
+def init_mlp(rng, d_model: int, d_ff: int, dtype=jnp.bfloat16):
+    k1, k2, k3 = jax.random.split(rng, 3)
+    s = d_model ** -0.5
+    return {
+        "w_gate": jax.random.normal(k1, (d_model, d_ff), dtype) * s,
+        "w_up": jax.random.normal(k2, (d_model, d_ff), dtype) * s,
+        "w_down": jax.random.normal(k3, (d_ff, d_model), dtype) * (d_ff ** -0.5),
+    }
+
+
+def mlp(params, x: Array) -> Array:
+    return (jax.nn.silu(x @ params["w_gate"]) * (x @ params["w_up"])) \
+        @ params["w_down"]

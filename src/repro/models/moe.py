@@ -1,0 +1,82 @@
+"""Top-k (Mixtral: top-2) mixture-of-experts FFN with capacity-based
+scatter/gather dispatch.
+
+Why not the classic GShard one-hot einsum dispatch: it materializes a
+(T, E, C) tensor, i.e. O(T^2) at fixed capacity factor — at train_4k's
+1M-token global batch that is exabytes. The scatter formulation below is
+O(T*k*d): tokens are placed into an (E*C, d) buffer by computed slot ids
+(position-within-expert via one cumsum over (T*k, E)), expert FFNs run as
+an E-batched GEMM, and outputs gather back by the same slot ids. Overflow
+beyond capacity goes to a trash slot (standard token dropping).
+
+Weight layouts (DESIGN.md §5): "tp" shards each expert's FFN hidden dim
+over `model` (default); "ep" (experts over a mesh axis) is exercised in the
+§Perf hillclimb with a reshaped mesh.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def init_moe(rng, d_model: int, d_ff: int, n_experts: int,
+             dtype=jnp.bfloat16):
+    k1, k2, k3, k4 = jax.random.split(rng, 4)
+    s = d_model ** -0.5
+    return {
+        "router": jax.random.normal(k1, (d_model, n_experts), jnp.float32) * s,
+        "w_gate": jax.random.normal(k2, (n_experts, d_model, d_ff), dtype) * s,
+        "w_up": jax.random.normal(k3, (n_experts, d_model, d_ff), dtype) * s,
+        "w_down": jax.random.normal(k4, (n_experts, d_ff, d_model), dtype)
+        * (d_ff ** -0.5),
+    }
+
+
+def moe_ffn(params, x: Array, n_experts_per_tok: int = 2,
+            capacity_factor: float = 1.25):
+    """x: (B, S, D) -> (out (B, S, D), aux load-balancing loss)."""
+    b, s, d = x.shape
+    e = params["w_gate"].shape[0]
+    k = n_experts_per_tok
+    t = b * s
+    xt = x.reshape(t, d)
+    logits = xt.astype(jnp.float32) @ params["router"]     # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topv, topi = jax.lax.top_k(probs, k)                   # (T, k)
+    topv = (topv / topv.sum(axis=-1, keepdims=True)).astype(x.dtype)
+
+    cap = max(int(capacity_factor * t * k / e), 8)
+
+    # position of each (token, slot) within its expert, FCFS by token index
+    flat_e = topi.reshape(t * k)                           # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)    # (T*k, E)
+    pos = (jnp.cumsum(onehot, axis=0) * onehot).sum(axis=-1) - 1
+    keep = pos < cap
+    # overflow -> out-of-bounds slot: scatter drops OOB under jit, gather
+    # back-fills zeros; keeps the buffer exactly (E*C, D) so the expert dim
+    # can shard over an `expert` mesh axis (EP layout, §Perf)
+    slot = jnp.where(keep, flat_e * cap + pos, e * cap)
+
+    xrep = jnp.repeat(xt, k, axis=0)                       # (T*k, D)
+    buf = jnp.zeros((e * cap, d), x.dtype).at[slot].set(xrep, mode="drop")
+    xin = buf.reshape(e, cap, d)
+
+    hmid = (jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, params["w_gate"],
+                                   preferred_element_type=jnp.float32))
+            * jnp.einsum("ecd,edf->ecf", xin, params["w_up"],
+                         preferred_element_type=jnp.float32)).astype(x.dtype)
+    xout = jnp.einsum("ecf,efd->ecd", hmid, params["w_down"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+    # gather back (OOB -> zeros) and combine with renormalized weights
+    back = jnp.take(xout.reshape(e * cap, d), slot, axis=0,
+                    mode="fill", fill_value=0).reshape(t, k, d)
+    out = (back * topv[..., None]).sum(axis=1)
+
+    # Switch-style load-balance aux: E * sum_e f_e * p_e
+    frac = onehot.reshape(t, k, e).sum(axis=1).astype(jnp.float32).mean(axis=0)
+    pmean = probs.mean(axis=0)
+    aux = e * jnp.sum(frac * pmean)
+    return out.reshape(b, s, d), aux

@@ -1,0 +1,48 @@
+"""Activation sharding constraints with logical axis names.
+
+``constrain(x, "dp", None, "model")`` resolves "dp" to ("pod","data") when
+the ambient abstract mesh has a pod axis, checks divisibility per dim, and
+no-ops entirely when tracing without a mesh (CPU unit tests). These anchors
+stop GSPMD from replicating the token dimension when weight shardings win
+the propagation contest (observed: without the post-embedding anchor, every
+per-layer GEMM ran on the full global batch per device).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+# experiment knob (§Perf A6/B2): resolve "dp" to include the model axis
+# (pure-DP layouts that use every chip for batch parallelism)
+DP_INCLUDE_MODEL = False
+
+
+def _mesh():
+    am = jax.sharding.get_abstract_mesh()
+    if am is None or not am.axis_names:
+        return None
+    return am
+
+
+def constrain(x, *spec):
+    am = _mesh()
+    if am is None:
+        return x
+    names = am.axis_names
+    sizes = dict(zip(names, am.axis_sizes))
+    resolved = []
+    for dim, s in enumerate(spec):
+        if s == "dp":
+            cand = ("pod", "data", "model") if DP_INCLUDE_MODEL \
+                else ("pod", "data")
+            axes = tuple(a for a in cand if a in names)
+            n = 1
+            for a in axes:
+                n *= sizes[a]
+            resolved.append(axes if axes and x.shape[dim] % n == 0 else None)
+        elif s is None:
+            resolved.append(None)
+        else:
+            ok = s in names and x.shape[dim] % sizes[s] == 0
+            resolved.append(s if ok else None)
+    return jax.lax.with_sharding_constraint(x, P(*resolved))

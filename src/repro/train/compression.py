@@ -1,0 +1,80 @@
+"""Gradient compression for the cross-pod (DCN) all-reduce.
+
+int8 block quantization with error feedback: each gradient leaf is scaled
+per 256-element block to int8, the quantization error is carried in a
+residual buffer and added back next step (error feedback keeps SGD/Adam
+convergence — Karimireddy et al. 2019). Applied to the *pod axis* reduction
+only: in-pod ICI is fast enough for full-precision gradients, the 8x byte
+reduction matters on DCN.
+
+``compressed_psum`` is the shard_map building block (tested on host
+devices); the trainer applies ``compress_decompress`` as a drop-in grad
+transform when TrainConfig.grad_compression == "int8" so the quantization
+*noise* (and error feedback) is bit-identical to what the two-stage
+reduction would produce.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+def _quant(x: jnp.ndarray) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _dequant(q, scale, shape) -> jnp.ndarray:
+    flat = (q.astype(jnp.float32) * scale).reshape(-1)
+    n = 1
+    for s in shape:
+        n *= s
+    return flat[:n].reshape(shape)
+
+
+def compress_decompress(grads: Any, residual: Any) -> Tuple[Any, Any]:
+    """Error-feedback int8 round trip: returns (grads_hat, new_residual)."""
+
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, s = _quant(x)
+        xh = _dequant(q, s, g.shape)
+        return xh.astype(g.dtype), x - xh
+
+    flat_g, tdef = jax.tree_util.tree_flatten(grads)
+    flat_r = tdef.flatten_up_to(residual)
+    outs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+    return (tdef.unflatten([o[0] for o in outs]),
+            tdef.unflatten([o[1] for o in outs]))
+
+
+def compressed_psum(x: jnp.ndarray, axis_name: str) -> jnp.ndarray:
+    """int8 all-reduce inside shard_map: agree on a shared per-block scale
+    (one tiny pmax), quantize against it, psum the int8 payloads in int32
+    (safe for <= 2^23 participants), dequantize once."""
+    flat = x.astype(jnp.float32).reshape(-1)
+    pad = (-flat.size) % BLOCK
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=1, keepdims=True) / 127.0 + 1e-12
+    scale = jax.lax.pmax(scale, axis_name)      # shared wire scale
+    q = jnp.clip(jnp.round(blocks / scale), -127, 127).astype(jnp.int8)
+    qsum = jax.lax.psum(q.astype(jnp.int32), axis_name)
+    return _dequant(qsum.astype(jnp.float32), scale, x.shape)
+
+
+def bytes_saved(grads: Any) -> Tuple[int, int]:
+    """(fp32_bytes, int8_bytes) for reporting in §Perf."""
+    n = sum(x.size for x in jax.tree_util.tree_leaves(grads))
+    fp = n * 4
+    q = n * 1 + (n // BLOCK + 1) * 4
+    return fp, q

@@ -1,0 +1,96 @@
+"""Fault tolerance & large-fleet hygiene for the training loop.
+
+Pieces (all exercised by tests and the example driver):
+  * ``Heartbeat`` — per-step liveness file + step-duration EWMA; a monitor
+    (or a co-scheduled watchdog on a real cluster) declares the worker dead
+    when the heartbeat goes stale and triggers restart-from-checkpoint.
+  * ``StragglerMonitor`` — flags steps slower than k x the EWMA (on a real
+    fleet this feeds the controller's hot-swap/evict decision; here it
+    also powers tests and the example's logging).
+  * ``resume_or_init`` — checkpoint/restart entry point: restores the
+    latest durable state (optionally onto a *different* mesh — elastic
+    data-axis resize) or builds a fresh one.
+  * ``DataSkipper`` — deterministic batch skipping so a restarted run
+    consumes exactly the batches the failed run did not finish.
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Any, Callable, Optional
+
+from . import checkpoint as ckpt_lib
+
+
+class Heartbeat:
+    def __init__(self, path: str, stale_after_s: float = 300.0):
+        self.path = path
+        self.stale_after_s = stale_after_s
+        os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+
+    def beat(self, step: int, extra: Optional[dict] = None):
+        rec = {"step": step, "t": time.time(), **(extra or {})}
+        tmp = self.path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(rec, f)
+        os.replace(tmp, self.path)
+
+    def is_stale(self) -> bool:
+        try:
+            with open(self.path) as f:
+                rec = json.load(f)
+        except FileNotFoundError:
+            return True
+        return (time.time() - rec["t"]) > self.stale_after_s
+
+
+class StragglerMonitor:
+    """EWMA of step durations; ``check`` returns True when the last step is
+    a straggler (> factor x EWMA). At fleet scale this signal drives
+    hot-spare swap-in; locally it drives logging/tests."""
+
+    def __init__(self, factor: float = 3.0, alpha: float = 0.1):
+        self.factor = factor
+        self.alpha = alpha
+        self.ewma: Optional[float] = None
+        self.n_stragglers = 0
+
+    def record(self, duration_s: float) -> bool:
+        if self.ewma is None:
+            self.ewma = duration_s
+            return False
+        is_straggler = duration_s > self.factor * self.ewma
+        if is_straggler:
+            self.n_stragglers += 1
+            # straggler steps do not poison the EWMA
+        else:
+            self.ewma = (1 - self.alpha) * self.ewma \
+                + self.alpha * duration_s
+        return is_straggler
+
+
+class DataSkipper:
+    """Deterministic seed-per-step batching: after restore at step k, the
+    pipeline regenerates batch k+1 exactly, so no data is skipped or
+    duplicated across restarts."""
+
+    def __init__(self, base_seed: int):
+        self.base_seed = base_seed
+
+    def seed_for_step(self, step: int) -> int:
+        return (self.base_seed * 1_000_003 + step) % (2**31 - 1)
+
+
+def resume_or_init(ckpt_dir: str, init_fn: Callable[[], Any],
+                   target_shape: Any = None, shardings: Any = None,
+                   ) -> tuple:
+    """(state, start_step). Restores the latest checkpoint if present
+    (resharding onto ``shardings`` — the elastic path), else initializes."""
+    step = ckpt_lib.latest_step(ckpt_dir)
+    if step is None:
+        return init_fn(), 0
+    target = target_shape if target_shape is not None else init_fn()
+    state = ckpt_lib.restore(ckpt_dir, target, step=step,
+                             shardings=shardings)
+    return state, step

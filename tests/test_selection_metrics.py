@@ -1,0 +1,101 @@
+"""Beam search support recovery (Fig. 2 regime, reduced), reg-path, and
+survival metrics sanity."""
+import numpy as np
+import pytest
+
+from repro.core import beam, cox, path
+from repro.data.synthetic import SyntheticSpec, make_correlated_survival
+from repro.survival import metrics
+
+
+@pytest.fixture(scope="module")
+def corr_problem():
+    spec = SyntheticSpec(n=400, p=60, k=4, rho=0.9, seed=1)
+    x, t, delta, beta_star = make_correlated_survival(spec)
+    return cox.prepare(x, t, delta), beta_star, (x, t, delta)
+
+
+def test_beam_search_recovers_support_high_corr(corr_problem):
+    data, beta_star, _ = corr_problem
+    k_true = int((beta_star != 0).sum())
+    res = beam.beam_search(data, k=k_true, beam_width=4, n_expand=6)
+    _, _, f1 = metrics.support_f1(beta_star, res.betas[-1])
+    assert f1 >= 0.75, f1
+    # loss decreases as support grows
+    assert all(np.diff(res.losses) <= 1e-6)
+
+
+def test_beam_beats_or_matches_omp(corr_problem):
+    data, beta_star, _ = corr_problem
+    k_true = int((beta_star != 0).sum())
+    res_b = beam.beam_search(data, k=k_true, beam_width=4, n_expand=6)
+    res_o = beam.omp_greedy(data, k=k_true)
+    assert res_b.losses[-1] <= res_o.losses[-1] + 1e-4
+
+
+def test_l1_path_monotone_support(corr_problem):
+    data, _, _ = corr_problem
+    pr = path.l1_path(data, n_lambdas=8, lambda_min_ratio=0.05, n_iters=40)
+    assert pr.support_sizes[0] <= 1
+    assert pr.support_sizes[-1] >= pr.support_sizes[0]
+    assert np.all(np.isfinite(pr.losses))
+    # stronger penalty -> higher (worse) unpenalized loss
+    assert pr.losses[0] >= pr.losses[-1] - 1e-6
+
+
+def test_lambda_max_kills_all_coefficients(corr_problem):
+    data, _, _ = corr_problem
+    from repro.core import solvers
+    lmax = path.lambda_max(data)
+    res = solvers.fit_cd(data, lam1=lmax * 1.01, lam2=0.0, n_iters=20)
+    assert np.all(np.abs(np.asarray(res.beta)) < 1e-10)
+
+
+def test_cindex_perfect_and_random():
+    rng = np.random.default_rng(0)
+    n = 200
+    t = rng.uniform(0, 1, n)
+    delta = np.ones(n)
+    # risk exactly anti-ordered with time -> perfect concordance
+    assert metrics.cindex(t, delta, -t) == 1.0
+    assert metrics.cindex(t, delta, t) == 0.0
+    r = metrics.cindex(t, delta, rng.standard_normal(n))
+    assert 0.4 < r < 0.6
+
+
+def test_cindex_against_naive():
+    rng = np.random.default_rng(1)
+    n = 80
+    t = np.round(rng.uniform(0, 1, n), 2)  # some ties
+    delta = (rng.uniform(size=n) < 0.6).astype(float)
+    risk = rng.standard_normal(n)
+    num, den = 0.0, 0
+    for i in range(n):
+        for j in range(n):
+            if delta[i] == 1 and t[i] < t[j]:
+                den += 1
+                if risk[i] > risk[j]:
+                    num += 1
+                elif np.isclose(risk[i], risk[j]):
+                    num += 0.5
+    assert np.isclose(metrics.cindex(t, delta, risk), num / den)
+
+
+def test_ibs_discriminative_model_beats_null(corr_problem):
+    data, beta_star, (x, t, delta) = corr_problem
+    eta_good = x @ beta_star
+    eta_null = np.zeros(len(t))
+    ibs_good = metrics.ibs(t, delta, eta_good, t, delta, eta_good)
+    ibs_null = metrics.ibs(t, delta, eta_null, t, delta, eta_null)
+    assert ibs_good < ibs_null
+    assert 0.0 <= ibs_good <= 0.5
+
+
+def test_support_f1():
+    bs = np.zeros(10)
+    bs[[1, 3, 5]] = 1.0
+    bh = np.zeros(10)
+    bh[[1, 3]] = 0.7
+    p, r, f1 = metrics.support_f1(bs, bh)
+    assert p == 1.0 and np.isclose(r, 2 / 3)
+    assert np.isclose(f1, 0.8)

@@ -1,0 +1,119 @@
+"""Property tests (hypothesis) for Theorem 3.4 Lipschitz bounds and the
+surrogate minimizers / analytic l1-prox solutions of Appendix A.4/A.5."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import cox, surrogate
+from repro.data.synthetic import make_tied_survival
+
+jax.config.update("jax_enable_x64", True)
+
+finite = st.floats(min_value=-50, max_value=50, allow_nan=False)
+pos = st.floats(min_value=1e-3, max_value=50, allow_nan=False)
+nonneg = st.floats(min_value=0.0, max_value=50, allow_nan=False)
+
+
+# ---------------------------------------------------------------------------
+# Theorem 3.4: L2/L3 bound the 2nd/3rd partials at *any* beta
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(min_value=0, max_value=10**6), st.floats(-2.0, 2.0))
+def test_lipschitz_bounds_hold_everywhere(seed, scale):
+    x, t, delta = make_tied_survival(n=50, p=4, n_times=8, seed=seed % 17)
+    data = cox.prepare(x.astype(np.float64), t, delta)
+    l2c, l3c = cox.lipschitz_constants(data)
+    rng = np.random.default_rng(seed)
+    beta = jnp.asarray(rng.standard_normal(4) * scale)
+    eta = data.x @ beta
+    for l in range(4):
+        _, h, c3 = cox.coord_derivs(data, eta, data.x[:, l], order=3)
+        assert -1e-9 <= float(h) <= float(l2c[l]) + 1e-9
+        assert abs(float(c3)) <= float(l3c[l]) + 1e-9
+
+
+def test_surrogates_majorize_along_coordinates():
+    """f(x + D e_l) <= quadratic / cubic surrogate value, random D sweep."""
+    x, t, delta = make_tied_survival(n=80, p=5, n_times=10, seed=3)
+    data = cox.prepare(x.astype(np.float64), t, delta)
+    l2c, l3c = cox.lipschitz_constants(data)
+    rng = np.random.default_rng(0)
+    beta = jnp.asarray(rng.standard_normal(5) * 0.4)
+    f0 = cox.objective(data, beta)
+    eta = data.x @ beta
+    for l in range(5):
+        g, h, _ = cox.coord_derivs(data, eta, data.x[:, l])
+        for d in rng.standard_normal(12) * 2.0:
+            f1 = cox.objective(data, beta.at[l].add(d))
+            quad = f0 + g * d + 0.5 * l2c[l] * d * d
+            cubic = f0 + g * d + 0.5 * h * d * d + l3c[l] / 6 * abs(d) ** 3
+            assert float(f1) <= float(quad) + 1e-8
+            assert float(f1) <= float(cubic) + 1e-8
+
+
+# ---------------------------------------------------------------------------
+# Analytic minimizers vs dense grid search
+# ---------------------------------------------------------------------------
+
+def _grid_argmin(fn, lo=-300.0, hi=300.0, n=600001):
+    grid = jnp.linspace(lo, hi, n)
+    vals = fn(grid)
+    return grid[jnp.argmin(vals)]
+
+
+@settings(max_examples=40, deadline=None)
+@given(finite, pos)
+def test_quad_min(a, b):
+    step = surrogate.quad_min(jnp.float64(a), jnp.float64(b))
+    assert np.isclose(float(step), -a / b, rtol=1e-10)
+
+
+@settings(max_examples=40, deadline=None)
+@given(finite, nonneg, pos)
+def test_cubic_min_vs_grid(a, b, c):
+    fn = lambda d: a * d + 0.5 * b * d**2 + c / 6 * jnp.abs(d) ** 3
+    step = float(surrogate.cubic_min(jnp.float64(a), jnp.float64(b),
+                                     jnp.float64(c)))
+    ref = float(_grid_argmin(fn))
+    assert float(fn(jnp.float64(step))) <= float(fn(jnp.float64(ref))) + 1e-5
+
+
+@settings(max_examples=60, deadline=None)
+@given(finite, pos, finite, nonneg)
+def test_quad_l1_prox_vs_grid(a, b, c, lam1):
+    fn = lambda d: a * d + 0.5 * b * d**2 + lam1 * jnp.abs(c + d)
+    step = float(surrogate.quad_l1_prox(
+        jnp.float64(a), jnp.float64(b), jnp.float64(c), jnp.float64(lam1)))
+    ref = float(_grid_argmin(fn))
+    assert float(fn(jnp.float64(step))) <= float(fn(jnp.float64(ref))) + 1e-5
+
+
+@settings(max_examples=60, deadline=None)
+@given(finite, nonneg, pos, finite, nonneg)
+def test_cubic_l1_prox_vs_grid(a, b, c, d, lam1):
+    fn = lambda dd: (a * dd + 0.5 * b * dd**2 + c / 6 * jnp.abs(dd) ** 3
+                     + lam1 * jnp.abs(d + dd))
+    step = float(surrogate.cubic_l1_prox(
+        jnp.float64(a), jnp.float64(b), jnp.float64(c), jnp.float64(d),
+        jnp.float64(lam1)))
+    ref = float(_grid_argmin(fn))
+    assert float(fn(jnp.float64(step))) <= float(fn(jnp.float64(ref))) + 1e-5
+
+
+@settings(max_examples=60, deadline=None)
+@given(finite, nonneg, pos, finite, nonneg)
+def test_cubic_l1_prox_paper_formula_agrees(a, b, c, d, lam1):
+    """Eq. (22) literal formula reaches the same objective value as the
+    robust candidate-enumeration solver."""
+    fn = lambda dd: (a * dd + 0.5 * b * dd**2 + c / 6 * jnp.abs(dd) ** 3
+                     + lam1 * jnp.abs(d + dd))
+    s_rob = float(surrogate.cubic_l1_prox(
+        jnp.float64(a), jnp.float64(b), jnp.float64(c), jnp.float64(d),
+        jnp.float64(lam1)))
+    s_pap = float(surrogate.cubic_l1_prox_paper(
+        jnp.float64(a), jnp.float64(b), jnp.float64(c), jnp.float64(d),
+        jnp.float64(lam1)))
+    assert np.isclose(float(fn(jnp.float64(s_pap))),
+                      float(fn(jnp.float64(s_rob))), rtol=1e-6, atol=1e-6)
