@@ -1,0 +1,93 @@
+"""Serving benchmark: batched vs per-request scoring, sparse vs dense.
+
+Rows (name,us_per_call,derived):
+  * serving/naive_loop      — 1 jit call per request (the no-batching bar)
+  * serving/batched         — RiskService micro-batches of ``max_batch``
+  * serving/batch_speedup   — req/s ratio (acceptance: >= 5x at batch 64)
+  * serving/dense|sparse/p=… — risk scoring path cost incl. the host-side
+    feature transfer; the k-sparse path ships (b, k) instead of (b, p)
+  * serving/latency         — p50/p99 from the service instrumentation
+"""
+import time
+
+import numpy as np
+
+from repro.data.synthetic import SyntheticSpec, make_correlated_survival
+from repro.serving import ScoringEngine, RiskService, fit_survival_model
+
+
+def _model(n, p, k, seed=0):
+    x, t, delta, beta_star = make_correlated_survival(
+        SyntheticSpec(n=n, p=p, k=k, rho=0.5, seed=seed, censor_scale=3.0))
+    # serve the ground-truth-sparse beta: the bench measures scoring, not
+    # fitting, so any k-sparse coefficient vector exercises the same path
+    return x, fit_survival_model(x, t, delta, beta_star)
+
+
+def run(smoke: bool = False):
+    rows = []
+    n_req = 64 if smoke else 256
+    max_batch = 16 if smoke else 64
+    n_train = 256 if smoke else 2000
+
+    # -- batched vs naive per-request (dense p=64) -------------------------
+    x, model = _model(n_train, 64, 6)
+    rng = np.random.default_rng(1)
+    feats = rng.standard_normal((n_req, 64)).astype(np.float32)
+
+    eng_naive = ScoringEngine(model, use_sparse=False)
+    eng_naive.risk_scores(feats[:1])          # warm the bucket-1 jit
+    eng_naive.median_survival(feats[:1])
+    t0 = time.perf_counter()
+    for i in range(n_req):
+        eng_naive.risk_scores(feats[i:i + 1])
+        eng_naive.median_survival(feats[i:i + 1])
+    dt_naive = time.perf_counter() - t0
+    rps_naive = n_req / dt_naive
+    rows.append(("serving/naive_loop", dt_naive / n_req * 1e6,
+                 f"reqs_per_s={rps_naive:.0f}"))
+
+    eng = ScoringEngine(model, use_sparse=False)
+    svc = RiskService(eng, max_batch=max_batch)
+    for i in range(max_batch):                # warm the full-bucket jit
+        svc.submit(feats[i % len(feats)])
+    svc.drain()
+    svc = RiskService(eng, max_batch=max_batch)
+    t0 = time.perf_counter()
+    for i in range(n_req):
+        svc.submit(feats[i])
+    svc.drain()
+    dt_batch = time.perf_counter() - t0
+    rps_batch = n_req / dt_batch
+    st = svc.stats()
+    rows.append(("serving/batched", dt_batch / n_req * 1e6,
+                 f"reqs_per_s={rps_batch:.0f}"))
+    rows.append(("serving/batch_speedup", 0.0,
+                 f"x{rps_batch / rps_naive:.1f} (accept >= 5x)"))
+    rows.append(("serving/latency", 0.0,
+                 f"p50={st.get('latency_p50_ms', 0):.2f}ms "
+                 f"p99={st.get('latency_p99_ms', 0):.2f}ms "
+                 f"mean_batch={st['mean_batch']:.0f}"))
+
+    # -- sparse vs dense risk scoring --------------------------------------
+    b = 64 if smoke else 1024
+    reps = 3 if smoke else 10
+    for p in ((1000,) if smoke else (1000, 4000)):
+        xs, model_s = _model(n_train, p, 8, seed=2)
+        qx = rng.standard_normal((b, p)).astype(np.float32)
+        for label, sparse in (("dense", False), ("sparse", True)):
+            eng_p = ScoringEngine(model_s, use_sparse=sparse)
+            eng_p.risk_scores(qx)             # warm
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                eng_p.risk_scores(qx)
+            us = (time.perf_counter() - t0) / reps * 1e6
+            rows.append((f"serving/{label}/p={p},b={b}", us,
+                         f"k={model_s.k if sparse else p}"))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for name, us, derived in run():
+        print(f"{name},{us:.1f},{derived}")

@@ -2,24 +2,66 @@
 
 Prints ``name,us_per_call,derived`` CSV. A full run on the CPU container
 takes a few minutes; individual benches: ``--only efficiency`` etc.
+
+``--smoke`` is the CI guard: it runs the serving-path test files through
+the tier-1 pytest entry point and then the serving benchmark at tiny
+shapes, so regressions in the jit-cache bucketing or the scoring kernels
+are caught in well under a minute.
 """
 import argparse
+import os
+import subprocess
+import sys
+
+
+def _smoke() -> int:
+    """Tier-1 pytest on the serving path + tiny-shape serving bench."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(root, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    tests = [os.path.join(root, "tests", f)
+             for f in ("test_serving.py", "test_kernels.py")]
+    print("[smoke] tier-1:", "python -m pytest -x -q", *tests, flush=True)
+    rc = subprocess.call([sys.executable, "-m", "pytest", "-x", "-q",
+                          *tests], env=env, cwd=root)
+    if rc != 0:
+        print("[smoke] FAILED: tier-1 tests")
+        return rc
+    from . import bench_serving
+    print("name,us_per_call,derived")
+    speedup_ok = False
+    for name, us, derived in bench_serving.run(smoke=True):
+        print(f"{name},{us:.1f},{derived}", flush=True)
+        if name == "serving/batch_speedup":
+            speedup_ok = float(derived.split()[0].lstrip("x")) > 1.0
+    if not speedup_ok:
+        print("[smoke] FAILED: batched serving slower than naive loop")
+        return 1
+    print("[smoke] OK")
+    return 0
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
                     choices=["all", "efficiency", "selection_f1",
-                             "selection_real", "kernels"])
+                             "selection_real", "kernels", "serving"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI guard: serving tests + tiny benches")
     args = ap.parse_args()
 
+    if args.smoke:
+        sys.exit(_smoke())
+
     from . import (bench_efficiency, bench_kernels, bench_selection_f1,
-                   bench_selection_real)
+                   bench_selection_real, bench_serving)
     benches = {
         "efficiency": bench_efficiency.run,       # paper Fig. 1 + App. D.1
         "selection_f1": bench_selection_f1.run,   # paper Fig. 2
         "selection_real": bench_selection_real.run,  # paper Figs. 3/4
         "kernels": bench_kernels.run,             # Cor. 3.3 machinery
+        "serving": bench_serving.run,             # inference subsystem
     }
     print("name,us_per_call,derived")
     for key, fn in benches.items():

@@ -66,6 +66,29 @@ def roofline_table(recs):
     return "\n".join(rows)
 
 
+def serving_kernel_table():
+    """Roofline of the serving scoring kernels at canonical QPS shapes."""
+    from . import roofline as rl
+    shapes = [
+        ("survival_curves", {"batch": 64, "grid": 128}),
+        ("survival_curves", {"batch": 1024, "grid": 128}),
+        ("risk_dense", {"batch": 64, "p": 10000}),
+        ("risk_sparse", {"batch": 64, "k": 10}),
+        ("risk_sparse", {"batch": 1024, "k": 10}),
+    ]
+    rows = ["| kernel | shape | flops | bytes | flops/byte | compute s | "
+            "memory s | bottleneck |",
+            "|---|---|---|---|---|---|---|---|"]
+    for name, shape in shapes:
+        k = rl.kernel_roofline(name, **shape)
+        sh = ",".join(f"{a}={v}" for a, v in shape.items())
+        rows.append(
+            f"| {name} | {sh} | {k.flops:.2e} | {k.bytes_accessed:.2e} "
+            f"| {k.intensity:.2f} | {fmt_s(k.compute_s)} "
+            f"| {fmt_s(k.memory_s)} | {k.bottleneck} |")
+    return "\n".join(rows)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default=os.path.join(
@@ -79,6 +102,8 @@ def main():
     print(dryrun_table(recs, "pod2x16x16"))
     print("\n## Roofline (single pod, per step)\n")
     print(roofline_table(recs))
+    print("\n## Serving kernel roofline (scoring hot path, per call)\n")
+    print(serving_kernel_table())
 
 
 if __name__ == "__main__":

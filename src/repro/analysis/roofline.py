@@ -143,6 +143,63 @@ def compute_roofline(flops: float, bytes_accessed: float,
         useful_flops_ratio=(mf / flops) if flops else 0.0)
 
 
+# ---------------------------------------------------------------------------
+# Serving scoring kernels (kernels/survival_curves.py + engine matvecs):
+# analytic per-call cost models so report.py covers the inference hot path.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class KernelRoofline:
+    name: str
+    flops: float
+    bytes_accessed: float
+    compute_s: float
+    memory_s: float
+    intensity: float             # flops / byte
+    bottleneck: str
+
+    def to_json(self):
+        return dataclasses.asdict(self)
+
+
+def _cost_survival_curves(batch: int, grid: int) -> Dict[str, float]:
+    """Fused S(t|x) panel: rank-1 outer product + exp, one HBM write of
+    the (b, g) output; exp counted as one flop like the MXU ops."""
+    return {"flops": 2.0 * batch * grid + batch,
+            "bytes": 4.0 * (batch + grid + batch * grid)}
+
+
+def _cost_risk_dense(batch: int, p: int) -> Dict[str, float]:
+    """eta = X beta + exp: streams the (b, p) feature panel once."""
+    return {"flops": 2.0 * batch * p + batch,
+            "bytes": 4.0 * (batch * p + p + batch)}
+
+
+def _cost_risk_sparse(batch: int, k: int) -> Dict[str, float]:
+    """Support-gathered matvec: O(k) per request on the beam-search path."""
+    return {"flops": 2.0 * batch * k + batch,
+            "bytes": 4.0 * (batch * k + k + batch)}
+
+
+SERVING_KERNELS = {
+    "survival_curves": _cost_survival_curves,
+    "risk_dense": _cost_risk_dense,
+    "risk_sparse": _cost_risk_sparse,
+}
+
+
+def kernel_roofline(name: str, **shape) -> KernelRoofline:
+    """Roofline terms for one registered serving kernel at a shape."""
+    cost = SERVING_KERNELS[name](**shape)
+    flops, nbytes = cost["flops"], cost["bytes"]
+    compute_s = flops / PEAK_FLOPS
+    memory_s = nbytes / HBM_BW
+    return KernelRoofline(
+        name=name, flops=flops, bytes_accessed=nbytes, compute_s=compute_s,
+        memory_s=memory_s, intensity=flops / nbytes if nbytes else 0.0,
+        bottleneck="compute" if compute_s >= memory_s else "memory")
+
+
 def model_flops_for(cfg, shape, n_params_active: int) -> float:
     """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference) with N = active
     params; D = tokens processed this step."""

@@ -18,6 +18,7 @@ from . import ref
 from .cox_batch import cox_batch as _cox_batch_kernel
 from .cox_coord import cox_coord as _cox_coord_kernel
 from .revcumsum import revcumsum as _revcumsum_kernel
+from .survival_curves import survival_curves as _survival_curves_kernel
 
 
 def _interpret() -> bool:
@@ -65,6 +66,13 @@ def cox_batch_grad_hess(eta: jax.Array, x: jax.Array, delta: jax.Array,
     return _cox_batch_kernel(x, w, r, wa, d32, inv_s0,
                              block_n=block_n, block_p=block_p,
                              interpret=_interpret())
+
+
+def survival_curves(eta: jax.Array, h0: jax.Array, block_b: int = 256,
+                    block_g: int = 128) -> jax.Array:
+    """Fused (batch x grid) survival curves — the serving hot path."""
+    return _survival_curves_kernel(eta, h0, block_b=block_b,
+                                   block_g=block_g, interpret=_interpret())
 
 
 def lipschitz_constants(x: jax.Array, delta: jax.Array,

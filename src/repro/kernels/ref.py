@@ -42,3 +42,9 @@ def cox_batch_ref(x: jax.Array, w: jax.Array, r: jax.Array, wa: jax.Array,
     m = s1 * inv_s0[:, None].astype(jnp.float32)
     term2 = (delta.astype(jnp.float32)[:, None] * m * m).sum(axis=0)
     return g, term1 - term2
+
+
+def survival_curves_ref(eta: jax.Array, h0: jax.Array) -> jax.Array:
+    """(b, g) S(t_g|x_b) = exp(-H0_g * exp(eta_b)), eta clipped to +/-30."""
+    risk = jnp.exp(jnp.clip(eta.astype(jnp.float32), -30.0, 30.0))
+    return jnp.exp(-risk[:, None] * h0.astype(jnp.float32)[None, :])

@@ -1,0 +1,63 @@
+"""Pallas TPU kernel: fused (batch x time-grid) survival-curve evaluation.
+
+S(t_g | x_b) = exp(-H0[g] * exp(eta[b])) — the serving hot path. The naive
+jnp version materializes the (b, g) hazard product in HBM before the exp;
+here the outer product runs on the MXU ((block_b, 1) @ (1, block_g)) and
+the exp fuses on the VPU, so the (b, g) panel is written to HBM exactly
+once. eta is clipped to +/-30 inside the kernel (matching the evaluation
+path in survival/metrics.py) so extreme risk scores saturate to 0/1
+probabilities instead of overflowing.
+
+Grid: (b_blocks, g_blocks); every block is independent (no carry), so any
+grid order is legal. VMEM per step is block_b*block_g*4B + O(block_b +
+block_g) — the default 256 x 128 panel is ~128 KB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _curves_kernel(eta_ref, h0_ref, o_ref):
+    eta = jnp.clip(eta_ref[...].astype(jnp.float32), -30.0, 30.0)  # (bb, 1)
+    h0 = h0_ref[...].astype(jnp.float32)                           # (1, bg)
+    risk = jnp.exp(eta)
+    prod = jax.lax.dot_general(
+        risk, h0, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    o_ref[...] = jnp.exp(-prod).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_b", "block_g", "interpret"))
+def survival_curves(eta: jax.Array, h0: jax.Array, block_b: int = 256,
+                    block_g: int = 128, interpret: bool = True) -> jax.Array:
+    """(b, g) survival probabilities from risk scores and baseline hazard.
+
+    eta: (b,) linear predictors; h0: (g,) cumulative baseline hazard on the
+    model's time grid (must be >= 0 and nondecreasing).
+    """
+    b, g = eta.shape[0], h0.shape[0]
+    bb = pl.cdiv(b, block_b)
+    gb = pl.cdiv(g, block_g)
+    pad_b = bb * block_b - b
+    pad_g = gb * block_g - g
+    etap = jnp.pad(eta, (0, pad_b)) if pad_b else eta
+    h0p = jnp.pad(h0, (0, pad_g)) if pad_g else h0
+
+    out = pl.pallas_call(
+        _curves_kernel,
+        grid=(bb, gb),
+        in_specs=[
+            pl.BlockSpec((block_b, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_g), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_b, block_g), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((bb * block_b, gb * block_g),
+                                       jnp.float32),
+        interpret=interpret,
+    )(etap.reshape(-1, 1), h0p.reshape(1, -1))
+    return out[:b, :g]

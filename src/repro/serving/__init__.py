@@ -1,0 +1,33 @@
+"""Survival inference serving subsystem — from fitted beta to risk API.
+
+Module map
+----------
+``artifacts.py``
+    ``SurvivalModel`` — the deployable artifact: dense or k-sparse beta,
+    Breslow/Efron cumulative baseline hazard on a fixed time grid (one row
+    per stratum), built in JAX from training data via the same O(n)
+    suffix-scan machinery as the solvers (``fit_survival_model``), and
+    persisted with train/checkpoint.py's npy-per-leaf + atomic-rename
+    idiom (``save`` / ``load``).
+
+``engine.py``
+    ``ScoringEngine`` — jit-compiled batched scoring: risk scores,
+    survival curves ``S(t|x) = exp(-H0(t) e^{x beta})`` over the grid
+    (fused Pallas kernel ``kernels/survival_curves.py`` on the
+    unstratified path), and median-survival queries. k-sparse models
+    gather only support columns (O(k) per request). Batches pad to
+    power-of-two buckets so the jit cache stays logarithmic.
+
+``service.py``
+    ``RiskService`` — continuous micro-batching request queue mirroring
+    launch/serve.py's loop: submit -> queue -> micro-batch -> jit score ->
+    respond, with req/s and p50/p99 latency instrumentation.
+
+End-to-end wiring: ``examples/serve_risk_api.py`` (beam-search model ->
+artifact -> service); throughput/latency numbers:
+``benchmarks/bench_serving.py``; roofline cost models for the scoring
+kernels: ``analysis/roofline.py`` (SERVING_KERNELS).
+"""
+from .artifacts import SurvivalModel, fit_survival_model  # noqa: F401
+from .engine import ScoringEngine  # noqa: F401
+from .service import RiskService, ScoreRequest, ScoreResponse  # noqa: F401

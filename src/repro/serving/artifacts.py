@@ -1,0 +1,205 @@
+"""SurvivalModel serving artifact: coefficients + baseline cumulative hazard.
+
+Turns a fitted CPH ``beta`` (dense CD, L1 path, or beam-search k-sparse)
+into everything a scoring engine needs at request time:
+
+  * ``beta`` (p,) plus, when the model is sparse, the support indices and
+    the gathered ``beta_support`` (k,) for the O(k) fast path;
+  * the Breslow (or Efron) cumulative baseline hazard evaluated on a fixed
+    ``time_grid`` (g,), stored per stratum as ``base_cumhaz`` (n_strata, g)
+    so ``S(t|x, s) = exp(-H0_s(t) * exp(x beta))`` is a gather + exp.
+
+The baseline is computed in JAX with the same O(n) suffix-scan machinery
+as training (``cox.revcumsum`` / ``risk_stats``): with w = exp(eta - m) and
+S0 at each sample's Breslow risk_start, the per-sample cumulative hazard is
+``cumsum(delta / S0) * exp(-m)`` — the ``a`` statistic of Theorem 3.1
+rescaled by the stabilizer. Efron replaces S0 by the tie-corrected
+``S0 - (j/d) W_d`` within each tie group.
+
+Persistence follows train/checkpoint.py's idiom: one .npy per array field
+plus a manifest.json, written to a tmp dir that is atomically renamed, so
+a crash mid-save can never corrupt a served artifact.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shutil
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import cox
+
+_ARRAY_FIELDS = ("beta", "time_grid", "base_cumhaz", "support",
+                 "beta_support", "strata_labels")
+_MANIFEST = "manifest.json"
+
+
+@dataclasses.dataclass(frozen=True)
+class SurvivalModel:
+    """Host-side serving artifact (numpy; the engine device-puts it)."""
+
+    beta: np.ndarray                       # (p,) dense coefficients
+    time_grid: np.ndarray                  # (g,) fixed evaluation grid
+    base_cumhaz: np.ndarray                # (n_strata, g) H0 per stratum
+    ties: str = "breslow"                  # "breslow" | "efron"
+    support: Optional[np.ndarray] = None   # (k,) int32 nonzero indices
+    beta_support: Optional[np.ndarray] = None  # (k,) gathered coefficients
+    strata_labels: Optional[np.ndarray] = None  # (n_strata,) original labels
+
+    @property
+    def p(self) -> int:
+        return self.beta.shape[0]
+
+    @property
+    def n_grid(self) -> int:
+        return self.time_grid.shape[0]
+
+    @property
+    def n_strata(self) -> int:
+        return self.base_cumhaz.shape[0]
+
+    @property
+    def k(self) -> Optional[int]:
+        return None if self.support is None else int(self.support.shape[0])
+
+    @property
+    def is_sparse(self) -> bool:
+        return self.support is not None
+
+    # -- persistence (checkpoint.py idiom: npy-per-leaf, atomic rename) ----
+
+    def save(self, path: str) -> str:
+        tmp = path + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        manifest = {"format": 1, "ties": self.ties, "arrays": {}}
+        for name in _ARRAY_FIELDS:
+            arr = getattr(self, name)
+            if arr is None:
+                continue
+            arr = np.asarray(arr)
+            np.save(os.path.join(tmp, f"{name}.npy"), arr)
+            manifest["arrays"][name] = {
+                "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        with open(os.path.join(tmp, _MANIFEST), "w") as f:
+            json.dump(manifest, f)
+        # overwrite by renaming the live artifact aside first: a crash at
+        # any point leaves either the old or the new dir fully intact
+        # (never an rmtree'd hole where the served artifact used to be)
+        old = path + ".old"
+        if os.path.exists(old):
+            shutil.rmtree(old)
+        if os.path.exists(path):
+            os.rename(path, old)
+        os.rename(tmp, path)
+        shutil.rmtree(old, ignore_errors=True)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "SurvivalModel":
+        with open(os.path.join(path, _MANIFEST)) as f:
+            manifest = json.load(f)
+        arrays = {name: np.load(os.path.join(path, f"{name}.npy"))
+                  for name in manifest["arrays"]}
+        return cls(ties=manifest["ties"], **arrays)
+
+
+# ---------------------------------------------------------------------------
+# Baseline hazard estimation (JAX, O(n) suffix scans)
+# ---------------------------------------------------------------------------
+
+def _cumhaz_samples(ts: jnp.ndarray, delta: jnp.ndarray,
+                    eta: jnp.ndarray, ties: str) -> jnp.ndarray:
+    """Per-sample cumulative baseline hazard on *time-sorted* data:
+    H0_k = sum_{i <= k} delta_i / S0_i (Breslow) with the stabilized-w
+    bookkeeping of cox.risk_stats. Returns (n,)."""
+    m = jnp.max(eta)
+    w = jnp.exp(eta - m)
+    rc0 = cox.revcumsum(w)
+    first = jnp.searchsorted(ts, ts, side="left")
+    s0 = rc0[first]
+    if ties == "breslow":
+        inc = delta / s0
+    elif ties == "efron":
+        # Tie groups are contiguous on the sorted axis, so the per-group
+        # quantities are O(n) segment sums via cumsum gathers at each
+        # group's first/last index (no (n, n) tie matrix):
+        #   j_rank = events strictly before me within my group
+        #   wd     = group's event-hazard sum,  d_cnt = group's event count
+        last = jnp.searchsorted(ts, ts, side="right") - 1
+        cd = jnp.cumsum(delta)
+        cwd = jnp.cumsum(delta * w)
+        j_rank = (cd - delta) - (cd[first] - delta[first])
+        wd = cwd[last] - (cwd[first] - (delta * w)[first])
+        d_cnt = jnp.maximum(cd[last] - (cd[first] - delta[first]), 1.0)
+        s0_eff = s0 - (j_rank / d_cnt) * wd
+        inc = delta / jnp.maximum(s0_eff, 1e-30)
+    else:
+        raise ValueError(f"unknown tie handling: {ties!r}")
+    return jnp.cumsum(inc) * jnp.exp(-m)
+
+
+def _cumhaz_on_grid(t: np.ndarray, delta: np.ndarray, eta: np.ndarray,
+                    grid: np.ndarray, ties: str) -> np.ndarray:
+    """H0 evaluated at each grid point (right-continuous step function)."""
+    order = np.argsort(t, kind="stable")
+    ts = jnp.asarray(t[order])
+    h_samples = np.asarray(_cumhaz_samples(
+        ts, jnp.asarray(delta[order]), jnp.asarray(eta[order]), ties))
+    ts_np = np.asarray(t[order], np.float64)
+    idx = np.searchsorted(ts_np, np.asarray(grid, np.float64),
+                          side="right") - 1
+    return np.where(idx >= 0, h_samples[np.clip(idx, 0, len(ts_np) - 1)],
+                    0.0).astype(np.float32)
+
+
+def fit_survival_model(x: np.ndarray, t: np.ndarray, delta: np.ndarray,
+                       beta: np.ndarray, *,
+                       strata: Optional[np.ndarray] = None,
+                       time_grid: Optional[np.ndarray] = None,
+                       grid_size: int = 128, ties: str = "breslow",
+                       support_tol: float = 1e-8) -> SurvivalModel:
+    """Build the serving artifact from training data and a fitted beta.
+
+    ``strata`` (n,) int labels produce one baseline row per stratum (risk
+    sets never cross strata, matching core/stratified.py). The default
+    ``time_grid`` spans the observed times with ``grid_size`` points.
+    """
+    x = np.asarray(x, np.float32)
+    t = np.asarray(t, np.float32)
+    delta = np.asarray(delta, np.float32)
+    beta = np.asarray(beta, np.float32)
+    eta = np.asarray(jnp.asarray(x) @ jnp.asarray(beta), np.float32)
+    if time_grid is None:
+        time_grid = np.linspace(float(t.min()), float(t.max()),
+                                grid_size, dtype=np.float32)
+    else:
+        time_grid = np.asarray(time_grid, np.float32)
+
+    strata_labels = None
+    if strata is None:
+        base = _cumhaz_on_grid(t, delta, eta, time_grid, ties)[None, :]
+    else:
+        strata = np.asarray(strata)
+        strata_labels = np.unique(strata)
+        rows = []
+        for s in strata_labels:
+            msk = strata == s
+            rows.append(_cumhaz_on_grid(t[msk], delta[msk], eta[msk],
+                                        time_grid, ties))
+        base = np.stack(rows, axis=0)
+
+    nz = np.flatnonzero(np.abs(beta) > support_tol)
+    support = beta_support = None
+    if len(nz) < beta.shape[0]:
+        support = nz.astype(np.int32)
+        beta_support = beta[nz]
+    return SurvivalModel(beta=beta, time_grid=time_grid,
+                         base_cumhaz=base.astype(np.float32), ties=ties,
+                         support=support, beta_support=beta_support,
+                         strata_labels=strata_labels)

@@ -1,0 +1,184 @@
+"""jit-compiled batched scoring engine over a SurvivalModel artifact.
+
+Three query types, all O(batch) jit calls over device-resident model state:
+
+  * ``risk_scores``      exp(x beta)                       -> (b,)
+  * ``survival_curves``  exp(-H0_s(t) exp(x beta))         -> (b, g)
+  * ``median_survival``  first grid time with S(t|x) <= .5 -> (b,)
+
+Sparse fast path: a beam-search model with support size k gathers only the
+k support columns on the host (O(b k) transferred instead of O(b p)) and
+scores with the gathered ``beta_support`` — per-request work is O(k), the
+serving-side payoff of FastSurvival's cardinality-constrained models.
+
+Shape bucketing: incoming batches are zero-padded up to the next power of
+two, so the jit cache holds at most log2(max_batch) entries per query type
+instead of one compilation per distinct batch size. Cache misses (i.e.
+fresh compilations) are counted for the instrumentation in service.py.
+
+The unstratified curve evaluation runs through the fused Pallas kernel
+(kernels/survival_curves.py); the stratified path gathers one baseline row
+per request first, which the kernel's rank-1 outer product cannot express,
+and stays in jnp.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops
+from .artifacts import SurvivalModel
+
+_ETA_CLIP = 30.0
+
+
+def _next_pow2(b: int) -> int:
+    return 1 << max(int(np.ceil(np.log2(max(b, 1)))), 0)
+
+
+class ScoringEngine:
+    """Batched scorer with a shape-bucketed jit cache."""
+
+    def __init__(self, model: SurvivalModel, *, use_sparse: Optional[bool]
+                 = None, max_sparse_k: int = 64, use_kernel: bool = True):
+        self.model = model
+        if use_sparse is None:
+            use_sparse = (model.is_sparse
+                          and model.k is not None and model.k <= max_sparse_k)
+        self.use_sparse = bool(use_sparse and model.is_sparse)
+        self.use_kernel = use_kernel
+        self._support = (np.asarray(model.support)
+                         if model.support is not None else None)
+        beta = (model.beta_support if self.use_sparse else model.beta)
+        self._beta = jnp.asarray(np.asarray(beta, np.float32))
+        self._h0 = jnp.asarray(np.asarray(model.base_cumhaz, np.float32))
+        self._grid = jnp.asarray(np.asarray(model.time_grid, np.float32))
+        self._cache: dict = {}
+        self.compiles = 0
+        self.calls = 0
+
+    # -- feature handling --------------------------------------------------
+
+    @property
+    def feature_dim(self) -> int:
+        """Columns the jit'd matvec consumes (k on the sparse path)."""
+        return (len(self._support) if self.use_sparse
+                else self.model.p)
+
+    def _gather(self, x: np.ndarray) -> np.ndarray:
+        """Host-side support gather: accepts (b, p) full features or
+        (b, k) pre-gathered ones on the sparse path."""
+        x = np.atleast_2d(np.asarray(x, np.float32))
+        if self.use_sparse and x.shape[1] == self.model.p:
+            x = x[:, self._support]
+        if x.shape[1] != self.feature_dim:
+            raise ValueError(
+                f"expected {self.feature_dim} or {self.model.p} features, "
+                f"got {x.shape[1]}")
+        return x
+
+    def _pad(self, x: np.ndarray):
+        b = x.shape[0]
+        bucket = _next_pow2(b)
+        if bucket != b:
+            x = np.pad(x, ((0, bucket - b), (0, 0)))
+        return x, b, bucket
+
+    def _fn(self, kind: str, bucket: int):
+        key = (kind, bucket, self.feature_dim)
+        fn = self._cache.get(key)
+        if fn is None:
+            self.compiles += 1
+            fn = self._build(kind)
+            self._cache[key] = fn
+        return fn
+
+    # -- jit'd query bodies ------------------------------------------------
+
+    def _build(self, kind: str):
+        h0 = self._h0
+        grid = self._grid
+        use_kernel = self.use_kernel and h0.shape[0] == 1
+
+        def eta_of(xb, beta):
+            return jnp.clip(xb @ beta, -_ETA_CLIP, _ETA_CLIP)
+
+        def curves(xb, beta, strata):
+            if use_kernel:
+                return ops.survival_curves(xb @ beta, h0[0])
+            hh = h0[strata]                      # (b, g) baseline gather
+            return jnp.exp(-hh * jnp.exp(eta_of(xb, beta))[:, None])
+
+        def median_of(s):
+            below = s <= 0.5
+            hit = jnp.any(below, axis=1)
+            idx = jnp.argmax(below, axis=1)
+            return jnp.where(hit, grid[idx], jnp.inf)
+
+        if kind == "risk":
+            def fn(xb, beta, strata):
+                return jnp.exp(eta_of(xb, beta))
+        elif kind == "curves":
+            fn = curves
+        elif kind == "median":
+            def fn(xb, beta, strata):
+                return median_of(curves(xb, beta, strata))
+        elif kind in ("score", "score_curves"):
+            # fused service query: one transfer + one curve panel per batch
+            def fn(xb, beta, strata):
+                s = curves(xb, beta, strata)
+                out = (jnp.exp(eta_of(xb, beta)), median_of(s))
+                return out + ((s,) if kind == "score_curves" else ())
+        else:
+            raise ValueError(kind)
+        return jax.jit(fn)
+
+    def _run(self, kind: str, x, strata):
+        xh = self._gather(x)
+        xp, b, bucket = self._pad(xh)
+        sp = np.zeros(bucket, np.int32)
+        if strata is not None:
+            s = np.asarray(strata, np.int32)
+            if s.size and (s.min() < 0 or s.max() >= self.model.n_strata):
+                # the jit'd gather would silently clamp out-of-range rows
+                raise ValueError(
+                    f"stratum indices must be in [0, {self.model.n_strata})"
+                    f", got range [{s.min()}, {s.max()}]")
+            sp[:b] = s
+        self.calls += 1
+        out = self._fn(kind, bucket)(jnp.asarray(xp), self._beta,
+                                     jnp.asarray(sp))
+        if isinstance(out, tuple):
+            return tuple(np.asarray(o)[:b] for o in out)
+        return np.asarray(out)[:b]
+
+    # -- public API --------------------------------------------------------
+
+    def risk_scores(self, x: np.ndarray) -> np.ndarray:
+        """exp(x beta) for a (b, p) or pre-gathered (b, k) batch."""
+        return self._run("risk", x, None)
+
+    def survival_curves(self, x: np.ndarray,
+                        strata: Optional[np.ndarray] = None) -> np.ndarray:
+        """(b, g) S(t|x) on the model grid. ``strata`` are baseline row
+        indices (positions in model.strata_labels), default stratum 0."""
+        return self._run("curves", x, strata)
+
+    def median_survival(self, x: np.ndarray,
+                        strata: Optional[np.ndarray] = None) -> np.ndarray:
+        """First grid time where S(t|x) drops to 1/2 (inf if never)."""
+        return self._run("median", x, strata)
+
+    def score(self, x: np.ndarray, strata: Optional[np.ndarray] = None,
+              with_curves: bool = False):
+        """Fused service query: (risk, median[, curves]) from a single jit
+        call — one host->device transfer and one curve panel per batch."""
+        return self._run("score_curves" if with_curves else "score",
+                         x, strata)
+
+    def cache_info(self) -> dict:
+        return {"entries": len(self._cache), "compiles": self.compiles,
+                "calls": self.calls}

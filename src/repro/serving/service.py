@@ -1,0 +1,183 @@
+"""Continuous micro-batching risk API over a ScoringEngine.
+
+Mirrors launch/serve.py's request-queue loop, but for scoring: requests
+land in a thread-safe queue; each ``step()`` drains up to ``max_batch`` of
+them, pads the stacked features to the engine's power-of-two bucket, runs
+one jit'd scoring call, and stamps per-request latency. ``start()`` runs
+the same loop on a background thread (the "continuous" mode: whatever has
+queued since the last step forms the next micro-batch — exactly the
+dynamic-batch policy of the LM serving loop, minus the decode recurrence).
+
+Instrumentation: per-request latency (submit -> response), micro-batch
+size histogram, throughput, and the engine's jit-cache counters, so
+bucketing regressions show up as compile-count blowups in stats().
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import queue
+import threading
+import time
+from typing import Deque, Dict, Optional
+
+import numpy as np
+
+from .engine import ScoringEngine
+
+
+@dataclasses.dataclass
+class ScoreRequest:
+    rid: int
+    features: np.ndarray                 # (p,) or pre-gathered (k,)
+    stratum: int = 0
+    t_submit: float = 0.0
+
+
+@dataclasses.dataclass
+class ScoreResponse:
+    rid: int
+    risk: float
+    median: float
+    curve: Optional[np.ndarray]
+    latency_s: float
+
+
+class RiskService:
+    """Queue + micro-batch drain loop with latency instrumentation."""
+
+    def __init__(self, engine: ScoringEngine, *, max_batch: int = 64,
+                 return_curves: bool = False, stats_window: int = 65536):
+        self.engine = engine
+        self.max_batch = max_batch
+        self.return_curves = return_curves
+        self._q: "queue.Queue[ScoreRequest]" = queue.Queue()
+        self._results: Dict[int, ScoreResponse] = {}
+        self._lock = threading.Lock()
+        self._rid = 0
+        # bounded windows: a long-running continuous service must not grow
+        # its instrumentation (or delivered results) without bound
+        self._batch_sizes: Deque[int] = collections.deque(
+            maxlen=stats_window)
+        self._latencies: Deque[float] = collections.deque(
+            maxlen=stats_window)
+        self._n_served = 0
+        self._t_first: Optional[float] = None
+        self._t_last: Optional[float] = None
+        self._thread: Optional[threading.Thread] = None
+        self._stop = threading.Event()
+
+    # -- request side ------------------------------------------------------
+
+    def submit(self, features: np.ndarray, stratum: int = 0) -> int:
+        with self._lock:
+            rid = self._rid
+            self._rid += 1
+            if self._t_first is None:
+                self._t_first = time.perf_counter()
+        self._q.put(ScoreRequest(rid=rid,
+                                 features=np.asarray(features, np.float32),
+                                 stratum=stratum,
+                                 t_submit=time.perf_counter()))
+        return rid
+
+    def result(self, rid: int) -> Optional[ScoreResponse]:
+        """Retrieve (and hand over) a scored response. The response is
+        popped so delivered results don't accumulate in a long-running
+        service; a second call for the same rid returns None."""
+        with self._lock:
+            return self._results.pop(rid, None)
+
+    def wait(self, rid: int, timeout: float = 30.0) -> ScoreResponse:
+        deadline = time.perf_counter() + timeout
+        while time.perf_counter() < deadline:
+            out = self.result(rid)
+            if out is not None:
+                return out
+            time.sleep(1e-4)
+        raise TimeoutError(f"request {rid} not scored within {timeout}s")
+
+    # -- serving side ------------------------------------------------------
+
+    def step(self) -> int:
+        """Score one micro-batch (whatever is queued, capped at max_batch).
+        Returns the number of requests served."""
+        reqs: List[ScoreRequest] = []
+        while len(reqs) < self.max_batch:
+            try:
+                reqs.append(self._q.get_nowait())
+            except queue.Empty:
+                break
+        if not reqs:
+            return 0
+        x = np.stack([r.features for r in reqs])
+        strata = np.asarray([r.stratum for r in reqs], np.int32)
+        out = self.engine.score(x, strata, with_curves=self.return_curves)
+        risks, medians = out[0], out[1]
+        curves = out[2] if self.return_curves else None
+        t_done = time.perf_counter()
+        with self._lock:
+            self._batch_sizes.append(len(reqs))
+            self._n_served += len(reqs)
+            self._t_last = t_done
+            for i, r in enumerate(reqs):
+                lat = t_done - r.t_submit
+                self._latencies.append(lat)
+                self._results[r.rid] = ScoreResponse(
+                    rid=r.rid, risk=float(risks[i]),
+                    median=float(medians[i]),
+                    curve=None if curves is None else curves[i],
+                    latency_s=lat)
+        return len(reqs)
+
+    def drain(self) -> int:
+        """Serve until the queue is empty; returns requests served."""
+        total = 0
+        while True:
+            n = self.step()
+            if n == 0:
+                return total
+            total += n
+
+    def start(self, poll_s: float = 1e-4):
+        """Continuous mode: drain micro-batches on a background thread."""
+        if self._thread is not None:
+            return
+        self._stop.clear()
+
+        def _loop():
+            while not self._stop.is_set():
+                if self.step() == 0:
+                    time.sleep(poll_s)
+
+        self._thread = threading.Thread(target=_loop, daemon=True)
+        self._thread.start()
+
+    def stop(self):
+        if self._thread is None:
+            return
+        self._stop.set()
+        self._thread.join()
+        self._thread = None
+
+    # -- instrumentation ---------------------------------------------------
+
+    def stats(self) -> dict:
+        """Served-request counters, throughput, and windowed latency
+        percentiles (over the last ``stats_window`` requests)."""
+        with self._lock:
+            lats = np.asarray(self._latencies)
+            n = self._n_served
+            wall = ((self._t_last - self._t_first)
+                    if (self._t_first is not None
+                        and self._t_last is not None) else 0.0)
+            sizes = list(self._batch_sizes)
+        out = {"n_requests": n, "wall_s": wall,
+               "reqs_per_s": (n / wall) if wall > 0 else float("nan"),
+               "n_batches": len(sizes),
+               "mean_batch": float(np.mean(sizes)) if sizes else 0.0,
+               "engine": self.engine.cache_info()}
+        if len(lats):
+            out["latency_p50_ms"] = float(np.percentile(lats, 50) * 1e3)
+            out["latency_p99_ms"] = float(np.percentile(lats, 99) * 1e3)
+        return out

@@ -7,7 +7,10 @@ import sys
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import cox, solvers
 from repro.data.synthetic import SyntheticSpec, make_correlated_survival

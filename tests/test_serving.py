@@ -1,0 +1,324 @@
+"""Serving subsystem: Breslow artifact parity with the numpy evaluation
+path, save/load round trips, sparse fast path, the fused curve kernel, and
+the continuous-batching service."""
+import numpy as np
+import pytest
+
+from repro.data.synthetic import make_tied_survival
+from repro.kernels import ops, ref
+from repro.kernels.survival_curves import survival_curves
+from repro.serving import (RiskService, ScoringEngine, SurvivalModel,
+                           fit_survival_model)
+from repro.survival import metrics
+
+
+def _problem(n=200, p=8, seed=0, ties=True):
+    if ties:
+        x, t, delta = make_tied_survival(n=n, p=p, seed=seed)
+    else:
+        rng = np.random.default_rng(seed)
+        x = rng.standard_normal((n, p)).astype(np.float32)
+        t = rng.permutation(1.0 + np.arange(n) / n).astype(np.float32)
+        delta = (rng.uniform(size=n) < 0.7).astype(np.float32)
+    rng = np.random.default_rng(seed + 1)
+    beta = (rng.standard_normal(p) * 0.4).astype(np.float32)
+    return x, t, delta, beta
+
+
+# ---------------------------------------------------------------------------
+# Breslow baseline: JAX artifact vs numpy survival/metrics.py estimator
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ties", [True, False])
+def test_breslow_artifact_matches_numpy(ties):
+    x, t, delta, beta = _problem(ties=ties)
+    model = fit_survival_model(x, t, delta, beta)
+    h = metrics.breslow_baseline(t, delta, x @ beta)
+    np.testing.assert_allclose(model.base_cumhaz[0], h(model.time_grid),
+                               rtol=1e-4, atol=1e-6)
+
+
+def test_breslow_artifact_stratified_matches_per_stratum_numpy():
+    x, t, delta, beta = _problem(n=240)
+    rng = np.random.default_rng(7)
+    strata = rng.integers(0, 3, size=len(t))
+    model = fit_survival_model(x, t, delta, beta, strata=strata)
+    assert model.n_strata == 3
+    eta = x @ beta
+    for s in range(3):
+        m = strata == s
+        h = metrics.breslow_baseline(t[m], delta[m], eta[m])
+        np.testing.assert_allclose(model.base_cumhaz[s],
+                                   h(model.time_grid),
+                                   rtol=1e-4, atol=1e-6)
+
+
+def test_efron_equals_breslow_without_ties():
+    x, t, delta, beta = _problem(ties=False)
+    mb = fit_survival_model(x, t, delta, beta, ties="breslow")
+    me = fit_survival_model(x, t, delta, beta, ties="efron")
+    np.testing.assert_allclose(me.base_cumhaz, mb.base_cumhaz,
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_efron_baseline_smaller_increments_with_ties():
+    """Efron's shrunk risk sets give H0 >= Breslow's at every grid point
+    (1/(S0 - c) >= 1/S0), strictly somewhere on heavily tied data."""
+    x, t, delta, beta = _problem(ties=True)
+    mb = fit_survival_model(x, t, delta, beta, ties="breslow")
+    me = fit_survival_model(x, t, delta, beta, ties="efron")
+    assert np.all(me.base_cumhaz >= mb.base_cumhaz - 1e-7)
+    assert np.any(me.base_cumhaz > mb.base_cumhaz + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Round trips (acceptance: bitwise identical curves after save -> load)
+# ---------------------------------------------------------------------------
+
+def _roundtrip_model(model, tmp_path, tag):
+    path = model.save(str(tmp_path / f"model_{tag}"))
+    return SurvivalModel.load(path)
+
+
+def test_roundtrip_bitwise_dense_sparse_stratified(tmp_path):
+    x, t, delta, beta = _problem(n=160, p=12)
+    rng = np.random.default_rng(3)
+    strata = rng.integers(0, 2, size=len(t))
+    beta_sparse = np.zeros_like(beta)
+    beta_sparse[[2, 7]] = beta[[2, 7]]
+    cases = {
+        "dense": (fit_survival_model(x, t, delta, beta), None),
+        "sparse": (fit_survival_model(x, t, delta, beta_sparse), None),
+        "strat": (fit_survival_model(x, t, delta, beta, strata=strata),
+                  strata[:16].astype(np.int32)),
+    }
+    q = x[:16]
+    for tag, (model, s) in cases.items():
+        loaded = _roundtrip_model(model, tmp_path, tag)
+        for field in ("beta", "time_grid", "base_cumhaz"):
+            np.testing.assert_array_equal(getattr(model, field),
+                                          getattr(loaded, field), err_msg=tag)
+        assert loaded.ties == model.ties
+        if model.support is not None:
+            np.testing.assert_array_equal(model.support, loaded.support)
+        c0 = ScoringEngine(model).survival_curves(q, strata=s)
+        c1 = ScoringEngine(loaded).survival_curves(q, strata=s)
+        np.testing.assert_array_equal(c0, c1, err_msg=tag)
+
+
+# ---------------------------------------------------------------------------
+# Engine: sparse fast path, curve formula, median, bucketing
+# ---------------------------------------------------------------------------
+
+def test_engine_sparse_matches_dense_path():
+    x, t, delta, beta = _problem(n=150, p=40)
+    beta_s = np.zeros(40, np.float32)
+    beta_s[[3, 17, 31]] = (0.5, -0.8, 0.3)
+    model = fit_survival_model(x, t, delta, beta_s)
+    assert model.k == 3
+    q = np.random.default_rng(0).standard_normal((33, 40)).astype(np.float32)
+    dense = ScoringEngine(model, use_sparse=False)
+    sparse = ScoringEngine(model, use_sparse=True)
+    np.testing.assert_allclose(sparse.risk_scores(q), dense.risk_scores(q),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(sparse.survival_curves(q),
+                               dense.survival_curves(q),
+                               rtol=1e-5, atol=1e-6)
+    # pre-gathered (b, k) features hit the same path
+    qk = q[:, model.support]
+    np.testing.assert_array_equal(sparse.risk_scores(qk),
+                                  sparse.risk_scores(q))
+
+
+def test_engine_curves_match_closed_form():
+    x, t, delta, beta = _problem()
+    model = fit_survival_model(x, t, delta, beta)
+    q = x[:10]
+    eta = np.clip(q @ beta, -30, 30)
+    expect = np.exp(-model.base_cumhaz[0][None, :]
+                    * np.exp(eta)[:, None])
+    got = ScoringEngine(model).survival_curves(q)
+    np.testing.assert_allclose(got, expect, rtol=1e-5, atol=1e-6)
+    # curves are nonincreasing in t and start near S(0) = 1
+    assert np.all(np.diff(got, axis=1) <= 1e-7)
+
+
+def test_engine_median_survival():
+    x, t, delta, beta = _problem()
+    model = fit_survival_model(x, t, delta, beta)
+    eng = ScoringEngine(model)
+    q = x[:20]
+    med = eng.median_survival(q)
+    s = eng.survival_curves(q)
+    grid = model.time_grid
+    for i in range(len(q)):
+        below = s[i] <= 0.5
+        if below.any():
+            assert med[i] == grid[np.argmax(below)]
+        else:
+            assert np.isinf(med[i])
+
+
+def test_engine_bucketed_jit_cache():
+    x, t, delta, beta = _problem()
+    model = fit_survival_model(x, t, delta, beta)
+    eng = ScoringEngine(model)
+    for b in (1, 2, 3, 5, 7, 9, 15, 17, 31, 33):
+        eng.risk_scores(x[:b])
+    # 10 distinct batch sizes collapse into pow2 buckets 1..64 -> <= 7
+    assert eng.cache_info()["entries"] <= 7
+
+
+# ---------------------------------------------------------------------------
+# Fused Pallas curve kernel vs jnp oracle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("b,g", [(1, 1), (7, 33), (256, 128), (300, 130)])
+def test_survival_curves_kernel_matches_ref(b, g):
+    rng = np.random.default_rng(b + g)
+    eta = rng.standard_normal(b).astype(np.float32) * 2.0
+    h0 = np.sort(rng.uniform(0, 3, g)).astype(np.float32)
+    out = survival_curves(eta, h0, block_b=128, block_g=64, interpret=True)
+    expect = ref.survival_curves_ref(eta, h0)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-6)
+
+
+def test_survival_curves_kernel_extreme_eta_saturates():
+    eta = np.asarray([-80.0, 80.0], np.float32)
+    h0 = np.asarray([0.5, 1.0], np.float32)
+    out = np.asarray(ops.survival_curves(eta, h0))
+    assert np.all(np.isfinite(out))
+    np.testing.assert_allclose(out[0], 1.0, atol=1e-6)   # ~zero risk
+    np.testing.assert_allclose(out[1], 0.0, atol=1e-6)   # huge risk
+
+
+# ---------------------------------------------------------------------------
+# Service: continuous batching
+# ---------------------------------------------------------------------------
+
+def test_service_scores_match_engine_and_buckets():
+    x, t, delta, beta = _problem(n=180, p=8)
+    model = fit_survival_model(x, t, delta, beta)
+    eng = ScoringEngine(model)
+    svc = RiskService(eng, max_batch=16, return_curves=True)
+    rids = [svc.submit(x[i]) for i in range(50)]
+    served = svc.drain()
+    assert served == 50
+    risks = eng.risk_scores(x[:50])
+    meds = eng.median_survival(x[:50])
+    for i, rid in enumerate(rids):
+        resp = svc.result(rid)
+        assert resp is not None
+        np.testing.assert_allclose(resp.risk, risks[i], rtol=1e-6)
+        assert resp.median == meds[i] or (np.isinf(resp.median)
+                                          and np.isinf(meds[i]))
+        assert resp.curve is not None and resp.curve.shape == (128,)
+        assert resp.latency_s >= 0.0
+    st = svc.stats()
+    assert st["n_requests"] == 50
+    assert st["n_batches"] >= 4          # 50 reqs / max_batch 16
+    assert st["latency_p99_ms"] >= st["latency_p50_ms"]
+
+
+def test_service_background_thread():
+    x, t, delta, beta = _problem(n=120, p=6)
+    model = fit_survival_model(x, t, delta, beta)
+    svc = RiskService(ScoringEngine(model), max_batch=8)
+    svc.start()
+    try:
+        rids = [svc.submit(x[i]) for i in range(20)]
+        outs = [svc.wait(rid, timeout=60.0) for rid in rids]
+    finally:
+        svc.stop()
+    assert len(outs) == 20
+    assert all(np.isfinite(o.risk) for o in outs)
+
+
+def test_service_stratified_requests():
+    x, t, delta, beta = _problem(n=200, p=8)
+    rng = np.random.default_rng(11)
+    strata = rng.integers(0, 2, size=len(t))
+    model = fit_survival_model(x, t, delta, beta, strata=strata)
+    eng = ScoringEngine(model)
+    svc = RiskService(eng, max_batch=8, return_curves=True)
+    r0 = svc.submit(x[0], stratum=0)
+    r1 = svc.submit(x[0], stratum=1)
+    svc.drain()
+    c0 = svc.result(r0).curve
+    c1 = svc.result(r1).curve
+    # same features, different baselines -> different curves
+    assert not np.allclose(c0, c1)
+    expect = np.exp(-model.base_cumhaz
+                    * np.exp(np.clip(x[0] @ beta, -30, 30)))
+    np.testing.assert_allclose(c0, expect[0], rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(c1, expect[1], rtol=1e-5, atol=1e-6)
+
+
+def test_engine_fused_score_matches_individual_queries():
+    x, t, delta, beta = _problem(n=150, p=8)
+    model = fit_survival_model(x, t, delta, beta)
+    eng = ScoringEngine(model)
+    q = x[:12]
+    risk, med, curves = eng.score(q, with_curves=True)
+    np.testing.assert_allclose(risk, eng.risk_scores(q), rtol=1e-6)
+    np.testing.assert_allclose(curves, eng.survival_curves(q), rtol=1e-6)
+    m_ref = eng.median_survival(q)
+    assert np.array_equal(med, m_ref) or np.allclose(
+        med[np.isfinite(med)], m_ref[np.isfinite(m_ref)])
+    risk2, med2 = eng.score(q, with_curves=False)
+    np.testing.assert_array_equal(risk2, risk)
+
+
+def test_engine_rejects_out_of_range_stratum():
+    x, t, delta, beta = _problem(n=120, p=6)
+    strata = np.random.default_rng(0).integers(0, 2, size=len(t))
+    model = fit_survival_model(x, t, delta, beta, strata=strata)
+    eng = ScoringEngine(model)
+    with pytest.raises(ValueError, match="stratum"):
+        eng.survival_curves(x[:4], strata=np.asarray([0, 1, 2, 0]))
+    with pytest.raises(ValueError, match="stratum"):
+        eng.survival_curves(x[:2], strata=np.asarray([-1, 0]))
+
+
+def test_service_result_hands_over_once():
+    x, t, delta, beta = _problem(n=100, p=6)
+    svc = RiskService(ScoringEngine(fit_survival_model(x, t, delta, beta)),
+                      max_batch=4)
+    rid = svc.submit(x[0])
+    svc.drain()
+    assert svc.result(rid) is not None
+    assert svc.result(rid) is None      # popped: no unbounded accumulation
+    assert svc.stats()["n_requests"] == 1
+
+
+def test_artifact_save_overwrite_never_leaves_hole(tmp_path):
+    x, t, delta, beta = _problem(n=80, p=6)
+    model = fit_survival_model(x, t, delta, beta)
+    path = model.save(str(tmp_path / "m"))
+    loaded1 = SurvivalModel.load(path)
+    path = model.save(str(tmp_path / "m"))      # overwrite in place
+    loaded2 = SurvivalModel.load(path)
+    np.testing.assert_array_equal(loaded1.base_cumhaz, loaded2.base_cumhaz)
+    assert not (tmp_path / "m.old").exists()
+    assert not (tmp_path / "m.tmp").exists()
+
+
+# ---------------------------------------------------------------------------
+# Satellite: chunked cindex parity
+# ---------------------------------------------------------------------------
+
+def test_cindex_chunked_matches_full_broadcast():
+    rng = np.random.default_rng(5)
+    n = 500
+    t = rng.uniform(0, 2, n)
+    t[::7] = t[1::7][: len(t[::7])]      # inject time ties
+    delta = (rng.uniform(size=n) < 0.6).astype(float)
+    risk = rng.standard_normal(n)
+    risk[::5] = risk[1::5][: len(risk[::5])]  # and risk ties
+    # oracle: the original single-shot broadcast
+    comparable = (t[:, None] < t[None, :]) & (delta[:, None] > 0)
+    conc = (risk[:, None] > risk[None, :]) & comparable
+    ties = np.isclose(risk[:, None], risk[None, :]) & comparable
+    expect = (conc.sum() + 0.5 * ties.sum()) / comparable.sum()
+    for chunk in (1, 17, 100, 4096):
+        assert metrics.cindex(t, delta, risk, chunk=chunk) == expect

@@ -3,7 +3,10 @@ surrogate minimizers / analytic l1-prox solutions of Appendix A.4/A.5."""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import cox, surrogate
 from repro.data.synthetic import make_tied_survival
