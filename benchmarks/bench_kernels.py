@@ -59,4 +59,14 @@ def run():
     d1 = jnp.asarray((rng.uniform(size=n) < 0.7).astype(np.float32))
     rows.append((f"kernels/pallas_cox_coord_interp/n={n}",
                  _time(coord, eta1, x1, d1, reps=2), "interpret-mode"))
+    m = 16
+    xl = jnp.asarray(rng.standard_normal((n, m)), jnp.float32)
+    rows.append((f"kernels/pallas_lipschitz_interp/n={n},m={m}",
+                 _time(ops.lipschitz_constants, xl, d1, reps=2),
+                 "interpret-mode"))
+    b, g = 1024, 128
+    etac = jnp.asarray(rng.standard_normal(b) * 0.5, jnp.float32)
+    h0 = jnp.asarray(np.linspace(0.0, 2.0, g), jnp.float32)
+    rows.append((f"kernels/pallas_survival_curves_interp/b={b},g={g}",
+                 _time(ops.survival_curves, etac, h0), "interpret-mode"))
     return rows

@@ -1,9 +1,13 @@
 """Serving benchmark: batched vs per-request scoring, sparse vs dense.
 
-Rows (name,us_per_call,derived):
+Rows are (name, us_per_call, derived[, value]) — ``derived`` stays a
+human-readable string for the CSV; ``value``, when present, is the same
+headline number as a float so run.py's smoke gate and the JSON emitter
+never parse strings:
   * serving/naive_loop      — 1 jit call per request (the no-batching bar)
   * serving/batched         — RiskService micro-batches of ``max_batch``
-  * serving/batch_speedup   — req/s ratio (acceptance: >= 5x at batch 64)
+  * serving/batch_speedup   — req/s ratio (acceptance: >= 5x at batch 64);
+    value = the ratio itself
   * serving/dense|sparse/p=… — risk scoring path cost incl. the host-side
     feature transfer; the k-sparse path ships (b, k) instead of (b, p)
   * serving/latency         — p50/p99 from the service instrumentation
@@ -45,7 +49,7 @@ def run(smoke: bool = False):
     dt_naive = time.perf_counter() - t0
     rps_naive = n_req / dt_naive
     rows.append(("serving/naive_loop", dt_naive / n_req * 1e6,
-                 f"reqs_per_s={rps_naive:.0f}"))
+                 f"reqs_per_s={rps_naive:.0f}", rps_naive))
 
     eng = ScoringEngine(model, use_sparse=False)
     svc = RiskService(eng, max_batch=max_batch)
@@ -60,14 +64,16 @@ def run(smoke: bool = False):
     dt_batch = time.perf_counter() - t0
     rps_batch = n_req / dt_batch
     st = svc.stats()
+    speedup = rps_batch / rps_naive
     rows.append(("serving/batched", dt_batch / n_req * 1e6,
-                 f"reqs_per_s={rps_batch:.0f}"))
+                 f"reqs_per_s={rps_batch:.0f}", rps_batch))
     rows.append(("serving/batch_speedup", 0.0,
-                 f"x{rps_batch / rps_naive:.1f} (accept >= 5x)"))
+                 f"x{speedup:.1f} (accept >= 5x)", speedup))
     rows.append(("serving/latency", 0.0,
                  f"p50={st.get('latency_p50_ms', 0):.2f}ms "
                  f"p99={st.get('latency_p99_ms', 0):.2f}ms "
-                 f"mean_batch={st['mean_batch']:.0f}"))
+                 f"mean_batch={st['mean_batch']:.0f}",
+                 st.get("latency_p99_ms", 0.0)))
 
     # -- sparse vs dense risk scoring --------------------------------------
     b = 64 if smoke else 1024
@@ -89,5 +95,5 @@ def run(smoke: bool = False):
 
 if __name__ == "__main__":
     print("name,us_per_call,derived")
-    for name, us, derived in run():
-        print(f"{name},{us:.1f},{derived}")
+    for row in run():
+        print(f"{row[0]},{row[1]:.1f},{row[2]}")

@@ -1,43 +1,242 @@
 """Benchmark harness: one module per paper table/figure.
 
-Prints ``name,us_per_call,derived`` CSV. A full run on the CPU container
-takes a few minutes; individual benches: ``--only efficiency`` etc.
+Prints ``name,us_per_call,derived`` CSV; ``--json PATH`` additionally
+writes structured records (the committed ``BENCH_*.json`` trajectory
+artifacts) of the form::
 
-``--smoke`` is the CI guard: it runs the serving-path test files through
-the tier-1 pytest entry point and then the serving benchmark at tiny
-shapes, so regressions in the jit-cache bucketing or the scoring kernels
-are caught in well under a minute.
+    {bench, name, us_per_call, derived, [value,] backend, tuned_blocks,
+     git_rev}
+
+``--autotune`` runs the kernel block-size sweep first (winners persist to
+``$REPRO_TUNE_CACHE``, default ``benchmarks/tuned_blocks.json``, and every
+subsequent kernel dispatch uses them). ``--only`` takes a comma-separated
+subset, e.g. ``--only kernels,serving``.
+
+``--smoke`` is the CI guard: tier-1 pytest on the serving/kernels/autotune
+path, a tiny autotune sweep into a throwaway cache, the serving benchmark
+at tiny shapes with schema validation of its records, and a regression
+gate on ``serving/batch_speedup`` against the committed ``BENCH_*.json``
+baseline when one exists — all in well under a minute.
+
+Runnable both as ``python -m benchmarks.run`` (with ``PYTHONPATH=src``)
+and directly as ``python benchmarks/run.py``.
 """
 import argparse
+import glob
+import json
 import os
 import subprocess
 import sys
 
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+BENCH_KEYS = ("efficiency", "selection_f1", "selection_real", "kernels",
+              "serving")
+
+# the bench-record schema BENCH_*.json files are validated against
+RECORD_REQUIRED = {
+    "bench": str,
+    "name": str,
+    "us_per_call": (int, float),
+    "derived": str,
+    "backend": str,
+    "tuned_blocks": dict,
+    "git_rev": str,
+}
+RECORD_OPTIONAL = {"value": (int, float)}
+
+# smoke gate: fail when serving/batch_speedup drops below this fraction
+# of the committed baseline
+REGRESSION_FLOOR = 0.8
+
+
+def _ensure_paths():
+    """Script mode (`python benchmarks/run.py`) has neither the repo root
+    nor src/ importable; module mode already does."""
+    for p in (ROOT, os.path.join(ROOT, "src")):
+        if p not in sys.path:
+            sys.path.insert(0, p)
+
+
+def _setup_runtime(verbose: bool = False):
+    """Runtime env policy + tune-cache location, before jax is pulled in."""
+    os.environ.setdefault("REPRO_TUNE_CACHE",
+                          os.path.join(ROOT, "benchmarks",
+                                       "tuned_blocks.json"))
+    _ensure_paths()
+    from repro.launch import runtime
+    runtime.apply()
+    if verbose:
+        runtime.log()
+    return runtime
+
+
+def _import_benches():
+    try:
+        from . import (bench_efficiency, bench_kernels, bench_selection_f1,
+                       bench_selection_real, bench_serving)
+    except ImportError:
+        from benchmarks import (bench_efficiency, bench_kernels,
+                                bench_selection_f1, bench_selection_real,
+                                bench_serving)
+    return {
+        "efficiency": bench_efficiency.run,       # paper Fig. 1 + App. D.1
+        "selection_f1": bench_selection_f1.run,   # paper Fig. 2
+        "selection_real": bench_selection_real.run,  # paper Figs. 3/4
+        "kernels": bench_kernels.run,             # Cor. 3.3 machinery
+        "serving": bench_serving.run,             # inference subsystem
+    }
+
+
+# -- structured records -----------------------------------------------------
+
+def _git_rev() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=ROOT, text=True,
+            stderr=subprocess.DEVNULL).strip()
+    except (OSError, subprocess.CalledProcessError):
+        return "unknown"
+
+
+def _run_metadata():
+    """(backend, tuned_blocks-for-backend, git_rev) stamped on records."""
+    import jax
+    from repro.kernels import autotune
+    backend = jax.default_backend()
+    entries = autotune.load_cache(refresh=True)
+    tuned = {k: dict(v.get("config", {})) for k, v in entries.items()
+             if k.startswith(backend + "/")}
+    return backend, tuned, _git_rev()
+
+
+def make_records(bench, rows, backend, tuned, git_rev):
+    recs = []
+    for row in rows:
+        rec = {"bench": bench, "name": row[0],
+               "us_per_call": float(row[1]), "derived": str(row[2]),
+               "backend": backend, "tuned_blocks": tuned,
+               "git_rev": git_rev}
+        if len(row) > 3 and row[3] is not None:
+            rec["value"] = float(row[3])
+        recs.append(rec)
+    return recs
+
+
+def validate_records(records):
+    """Schema errors for a BENCH_*.json payload ([] when valid)."""
+    if not isinstance(records, list) or not records:
+        return ["payload must be a non-empty list of records"]
+    errors = []
+    for i, r in enumerate(records):
+        if not isinstance(r, dict):
+            errors.append(f"record {i}: not an object")
+            continue
+        label = r.get("name", f"record {i}")
+        for k, t in RECORD_REQUIRED.items():
+            if k not in r:
+                errors.append(f"{label}: missing required key '{k}'")
+            elif not isinstance(r[k], t):
+                errors.append(f"{label}: key '{k}' has type "
+                              f"{type(r[k]).__name__}")
+        for k, t in RECORD_OPTIONAL.items():
+            if k in r and not isinstance(r[k], t):
+                errors.append(f"{label}: key '{k}' has type "
+                              f"{type(r[k]).__name__}")
+    return errors
+
+
+def _baseline_record(bench, name):
+    """Matching record from the newest committed BENCH_*.json, if any."""
+    paths = sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json")))
+    if not paths:
+        return None, None
+    path = paths[-1]
+    try:
+        with open(path) as f:
+            records = json.load(f)
+    except (OSError, ValueError):
+        return None, path
+    for r in records if isinstance(records, list) else []:
+        if (isinstance(r, dict) and r.get("bench") == bench
+                and r.get("name") == name):
+            return r, path
+    return None, path
+
+
+def _print_rows(rows):
+    for row in rows:
+        print(f"{row[0]},{row[1]:.1f},{row[2]}", flush=True)
+
+
+# -- CI smoke gate ----------------------------------------------------------
 
 def _smoke() -> int:
-    """Tier-1 pytest on the serving path + tiny-shape serving bench."""
-    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    """Tier-1 pytest on the serving path, tiny autotune sweep, tiny-shape
+    serving bench with schema validation, speedup regression gate."""
+    import tempfile
+
     env = dict(os.environ)
-    env["PYTHONPATH"] = (os.path.join(root, "src")
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src")
                          + os.pathsep + env.get("PYTHONPATH", ""))
-    tests = [os.path.join(root, "tests", f)
-             for f in ("test_serving.py", "test_kernels.py")]
+    tests = [os.path.join(ROOT, "tests", f)
+             for f in ("test_serving.py", "test_kernels.py",
+                       "test_autotune.py")]
     print("[smoke] tier-1:", "python -m pytest -x -q", *tests, flush=True)
     rc = subprocess.call([sys.executable, "-m", "pytest", "-x", "-q",
-                          *tests], env=env, cwd=root)
+                          *tests], env=env, cwd=ROOT)
     if rc != 0:
         print("[smoke] FAILED: tier-1 tests")
         return rc
-    from . import bench_serving
-    print("name,us_per_call,derived")
-    speedup_ok = False
-    for name, us, derived in bench_serving.run(smoke=True):
-        print(f"{name},{us:.1f},{derived}", flush=True)
-        if name == "serving/batch_speedup":
-            speedup_ok = float(derived.split()[0].lstrip("x")) > 1.0
-    if not speedup_ok:
-        print("[smoke] FAILED: batched serving slower than naive loop")
+
+    from repro.kernels import autotune
+    with tempfile.TemporaryDirectory() as td:
+        winners = autotune.sweep(
+            [("revcumsum", {"n": 256, "m": 8}),
+             ("survival_curves", {"b": 32, "g": 32})],
+            cache_file=os.path.join(td, "tuned.json"), reps=1)
+    if len(winners) != 2 or not all(winners.values()):
+        print("[smoke] FAILED: autotune sweep returned no winners")
         return 1
+    print(f"[smoke] autotune sweep ok: "
+          + "; ".join(f"{k} -> {v}" for k, v in winners.items()),
+          flush=True)
+
+    benches = _import_benches()
+    print("name,us_per_call,derived")
+    rows = list(benches["serving"](smoke=True))
+    _print_rows(rows)
+    speedup = next((row[3] for row in rows
+                    if row[0] == "serving/batch_speedup" and len(row) > 3),
+                   None)
+    if speedup is None or speedup <= 1.0:
+        print("[smoke] FAILED: batched serving slower than naive loop "
+              f"(speedup={speedup})")
+        return 1
+
+    backend, tuned, rev = _run_metadata()
+    records = make_records("serving_smoke", rows, backend, tuned, rev)
+    errors = validate_records(records)
+    if errors:
+        print("[smoke] FAILED: bench records violate schema:")
+        for e in errors:
+            print(f"[smoke]   {e}")
+        return 1
+    print(f"[smoke] schema ok ({len(records)} records)")
+
+    base, path = _baseline_record("serving_smoke", "serving/batch_speedup")
+    if base is not None and "value" in base:
+        floor = REGRESSION_FLOOR * base["value"]
+        if speedup < floor:
+            print(f"[smoke] FAILED: serving/batch_speedup x{speedup:.2f} "
+                  f"regressed >20% vs baseline x{base['value']:.2f} "
+                  f"({os.path.basename(path)})")
+            return 1
+        print(f"[smoke] speedup x{speedup:.2f} within 20% of baseline "
+              f"x{base['value']:.2f} ({os.path.basename(path)})")
+    else:
+        print("[smoke] no committed BENCH_*.json baseline — "
+              "regression gate skipped")
     print("[smoke] OK")
     return 0
 
@@ -45,30 +244,60 @@ def _smoke() -> int:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="all",
-                    choices=["all", "efficiency", "selection_f1",
-                             "selection_real", "kernels", "serving"])
+                    help="comma-separated subset of "
+                         f"{','.join(BENCH_KEYS)} (default: all)")
     ap.add_argument("--smoke", action="store_true",
-                    help="fast CI guard: serving tests + tiny benches")
+                    help="fast CI guard: serving tests + tiny benches + "
+                         "autotune sweep + schema/regression gates")
+    ap.add_argument("--json", metavar="PATH",
+                    help="write structured bench records (BENCH_*.json)")
+    ap.add_argument("--autotune", action="store_true",
+                    help="run the default block-size sweep first; winners "
+                         "persist to $REPRO_TUNE_CACHE and are used by "
+                         "the benches")
     args = ap.parse_args()
 
+    _setup_runtime(verbose=not args.smoke)
     if args.smoke:
         sys.exit(_smoke())
 
-    from . import (bench_efficiency, bench_kernels, bench_selection_f1,
-                   bench_selection_real, bench_serving)
-    benches = {
-        "efficiency": bench_efficiency.run,       # paper Fig. 1 + App. D.1
-        "selection_f1": bench_selection_f1.run,   # paper Fig. 2
-        "selection_real": bench_selection_real.run,  # paper Figs. 3/4
-        "kernels": bench_kernels.run,             # Cor. 3.3 machinery
-        "serving": bench_serving.run,             # inference subsystem
-    }
+    selected = (set(BENCH_KEYS) if args.only == "all"
+                else {s.strip() for s in args.only.split(",") if s.strip()})
+    unknown = selected - set(BENCH_KEYS)
+    if unknown:
+        ap.error(f"unknown bench(es): {','.join(sorted(unknown))}")
+
+    if args.autotune:
+        from repro.kernels import autotune
+        autotune.sweep(verbose=True)
+
+    benches = _import_benches()
+    backend, tuned, rev = _run_metadata()
+    records = []
     print("name,us_per_call,derived")
     for key, fn in benches.items():
-        if args.only not in ("all", key):
+        if key not in selected:
             continue
-        for name, us, derived in fn():
-            print(f"{name},{us:.1f},{derived}", flush=True)
+        rows = list(fn())
+        _print_rows(rows)
+        records += make_records(key, rows, backend, tuned, rev)
+
+    if args.json:
+        if "serving" in selected:
+            # a tiny-shape serving pass rides along so --smoke has an
+            # apples-to-apples baseline for its regression gate
+            rows = list(benches["serving"](smoke=True))
+            records += make_records("serving_smoke", rows, backend, tuned,
+                                    rev)
+        errors = validate_records(records)
+        if errors:
+            for e in errors:
+                print(f"[json] schema error: {e}", file=sys.stderr)
+            sys.exit(1)
+        with open(args.json, "w") as f:
+            json.dump(records, f, indent=1, sort_keys=True)
+            f.write("\n")
+        print(f"[json] wrote {len(records)} records -> {args.json}")
 
 
 if __name__ == "__main__":

@@ -7,8 +7,13 @@ median-survival queries through the continuous-batching RiskService —
 the O(k)-per-request payoff of very sparse CPH models.
 
     PYTHONPATH=src python examples/serve_risk_api.py
+(or, with tcmalloc + the full env policy: scripts/launch.sh examples/serve_risk_api.py)
 """
 import tempfile
+
+from repro.launch import runtime
+
+runtime.apply()   # env/XLA/dtype policy before jax initializes
 
 import numpy as np
 
@@ -19,6 +24,7 @@ from repro.serving import (RiskService, ScoringEngine, SurvivalModel,
 
 
 def main():
+    runtime.log()
     spec = SyntheticSpec(n=400, p=120, k=4, rho=0.7, seed=3,
                          censor_scale=3.0)
     x, t, delta, beta_star = make_correlated_survival(spec)

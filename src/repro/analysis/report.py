@@ -89,11 +89,47 @@ def serving_kernel_table():
     return "\n".join(rows)
 
 
+def tuned_blocks_table(cache_path=None):
+    """Autotune winners vs the static default blocks, per backend/bucket.
+
+    Reads the tuned_blocks.json cache written by kernels/autotune.py (plus
+    anything already registered in-process via roofline.register_tuned).
+    """
+    from . import roofline as rl
+    if cache_path:
+        rl.load_tuned(cache_path)
+    rows = ["| kernel | backend | bucket | tuned blocks | tuned us | "
+            "default blocks | default us | speedup |",
+            "|---|---|---|---|---|---|---|---|"]
+    if not rl.TUNED_KERNELS:
+        rows.append("| (no autotune winners recorded — run "
+                    "`benchmarks/run.py --autotune`) | | | | | | | |")
+        return "\n".join(rows)
+
+    def blk(cfg):
+        return ",".join(f"{k}={v}" for k, v in sorted((cfg or {}).items()))
+
+    for key in sorted(rl.TUNED_KERNELS):
+        e = rl.TUNED_KERNELS[key]
+        backend, _, rest = key.partition("/")
+        _, _, bucket = rest.partition("/")
+        us, dus = e.get("us"), e.get("default_us")
+        rows.append("| {} | {} | {} | {} | {} | {} | {} | {} |".format(
+            e.get("kernel", key), backend, bucket, blk(e.get("config")),
+            f"{us:.1f}" if us else "-", blk(e.get("default_config")),
+            f"{dus:.1f}" if dus else "-",
+            f"{dus / us:.2f}x" if us and dus else "-"))
+    return "\n".join(rows)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--dir", default=os.path.join(
         os.path.dirname(__file__), "..", "..", "..", "benchmarks",
         "dryrun_results"))
+    ap.add_argument("--tune-cache", default=os.path.join(
+        os.path.dirname(__file__), "..", "..", "..", "benchmarks",
+        "tuned_blocks.json"))
     args = ap.parse_args()
     recs = load(args.dir)
     print("## Dry-run (single pod 16x16)\n")
@@ -104,6 +140,8 @@ def main():
     print(roofline_table(recs))
     print("\n## Serving kernel roofline (scoring hot path, per call)\n")
     print(serving_kernel_table())
+    print("\n## Tuned kernel blocks (autotune winners vs defaults)\n")
+    print(tuned_blocks_table(args.tune_cache))
 
 
 if __name__ == "__main__":

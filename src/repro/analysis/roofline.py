@@ -200,6 +200,35 @@ def kernel_roofline(name: str, **shape) -> KernelRoofline:
         bottleneck="compute" if compute_s >= memory_s else "memory")
 
 
+# ---------------------------------------------------------------------------
+# Tuned-block registry: the autotuner (kernels/autotune.py) registers each
+# winner here, and report.py renders the tuned-vs-default table from it.
+# Keys are "backend/kernel/bucket" — the same keys as the JSON tune cache.
+# ---------------------------------------------------------------------------
+
+TUNED_KERNELS: Dict[str, dict] = {}
+
+
+def register_tuned(key: str, entry: dict) -> None:
+    """Record one autotune winner: ``entry`` carries at least ``config``;
+    timed entries also carry ``us``, ``default_config``, ``default_us``."""
+    TUNED_KERNELS[key] = dict(entry)
+
+
+def load_tuned(path: str) -> Dict[str, dict]:
+    """Populate the registry from a tuned_blocks.json cache file (no-op on
+    a missing/corrupt file — the registry just stays as-is)."""
+    try:
+        with open(path) as f:
+            data = json.load(f)
+    except (OSError, ValueError):
+        return TUNED_KERNELS
+    for key, entry in (data.get("entries") or {}).items():
+        if isinstance(entry, dict):
+            register_tuned(key, entry)
+    return TUNED_KERNELS
+
+
 def model_flops_for(cfg, shape, n_params_active: int) -> float:
     """MODEL_FLOPS = 6*N*D (train) / 2*N*D (inference) with N = active
     params; D = tokens processed this step."""

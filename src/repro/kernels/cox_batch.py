@@ -60,14 +60,9 @@ def _kernel(x_ref, r_ref, wa_ref, w_ref, d_ref, inv_s0_ref,
 
 @functools.partial(jax.jit,
                    static_argnames=("block_n", "block_p", "interpret"))
-def cox_batch(x: jax.Array, w: jax.Array, r: jax.Array, wa: jax.Array,
-              delta: jax.Array, inv_s0: jax.Array,
-              block_n: int = 512, block_p: int = 256,
-              interpret: bool = True):
-    """(grad, hess_diag) for all p coordinates. Inputs time-sorted, no ties.
-
-    x: (n, p); w, r, wa, delta, inv_s0: (n,) precomputed in ops.py.
-    """
+def _cox_batch_jit(x: jax.Array, w: jax.Array, r: jax.Array, wa: jax.Array,
+                   delta: jax.Array, inv_s0: jax.Array,
+                   block_n: int, block_p: int, interpret: bool):
     n, p = x.shape
     nb = pl.cdiv(n, block_n)
     pb = pl.cdiv(p, block_p)
@@ -94,3 +89,20 @@ def cox_batch(x: jax.Array, w: jax.Array, r: jax.Array, wa: jax.Array,
         interpret=interpret,
     )(xp, col(r), col(wa), col(w), col(delta), col(inv_s0))
     return g[0, :p], h[0, :p]
+
+
+def cox_batch(x: jax.Array, w: jax.Array, r: jax.Array, wa: jax.Array,
+              delta: jax.Array, inv_s0: jax.Array,
+              block_n: int = 512, block_p: int = 256,
+              interpret: bool | None = None):
+    """(grad, hess_diag) for all p coordinates. Inputs time-sorted, no ties.
+
+    x: (n, p); w, r, wa, delta, inv_s0: (n,) precomputed in ops.py.
+    ``interpret=None`` resolves backend-aware: native on TPU, interpret
+    mode elsewhere. Pass an explicit bool to override (tests).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _cox_batch_jit(x, w, r, wa, delta, inv_s0,
+                          block_n=block_n, block_p=block_p,
+                          interpret=interpret)

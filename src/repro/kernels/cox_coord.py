@@ -80,10 +80,8 @@ def _make_kernel(order: int):
 
 @functools.partial(jax.jit,
                    static_argnames=("order", "block", "interpret"))
-def cox_coord(eta: jax.Array, x: jax.Array, delta: jax.Array,
-              order: int = 2, block: int = 1024,
-              interpret: bool = True):
-    """Fused (g, h[, c3]) for one coordinate; n-length 1-D inputs, no ties."""
+def _cox_coord_jit(eta: jax.Array, x: jax.Array, delta: jax.Array,
+                   order: int, block: int, interpret: bool):
     n = eta.shape[0]
     nb = pl.cdiv(n, block)
     pad = nb * block - n
@@ -119,3 +117,17 @@ def cox_coord(eta: jax.Array, x: jax.Array, delta: jax.Array,
         interpret=interpret,
     )(eta_max, eta_p, x_p, d_p)
     return g[0, 0], h[0, 0], c3[0, 0]
+
+
+def cox_coord(eta: jax.Array, x: jax.Array, delta: jax.Array,
+              order: int = 2, block: int = 1024,
+              interpret: bool | None = None):
+    """Fused (g, h[, c3]) for one coordinate; n-length 1-D inputs, no ties.
+
+    ``interpret=None`` resolves backend-aware: native on TPU, interpret
+    mode elsewhere. Pass an explicit bool to override (tests).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _cox_coord_jit(eta, x, delta, order=order, block=block,
+                          interpret=interpret)

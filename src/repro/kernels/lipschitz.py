@@ -62,9 +62,8 @@ def _kernel(x_ref, d_ref, l2_ref, l3_ref, carry_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def lipschitz(x: jax.Array, delta: jax.Array, block_n: int = 512,
-              interpret: bool = True):
-    """(L2 (m,), L3 (m,)) for a time-sorted tie-free (n, m) panel."""
+def _lipschitz_jit(x: jax.Array, delta: jax.Array, block_n: int,
+                   interpret: bool):
     n, m = x.shape
     nb = pl.cdiv(n, block_n)
     pad = nb * block_n - n
@@ -89,3 +88,15 @@ def lipschitz(x: jax.Array, delta: jax.Array, block_n: int = 512,
         interpret=interpret,
     )(x, delta.reshape(-1, 1))
     return l2[0], l3[0]
+
+
+def lipschitz(x: jax.Array, delta: jax.Array, block_n: int = 512,
+              interpret: bool | None = None):
+    """(L2 (m,), L3 (m,)) for a time-sorted tie-free (n, m) panel.
+
+    ``interpret=None`` resolves backend-aware: native on TPU, interpret
+    mode elsewhere. Pass an explicit bool to override (tests).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _lipschitz_jit(x, delta, block_n=block_n, interpret=interpret)

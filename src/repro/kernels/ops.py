@@ -1,60 +1,72 @@
 """jit'd public wrappers around the Pallas kernels.
 
 Selection logic:
-  * on TPU the compiled kernels run natively;
-  * elsewhere (this container) they run in interpret mode for correctness;
-  * data with tied event times falls back to the pure-jnp Breslow reference
-    (the kernels implement the tie-free fast path; ties need a gather at
-    risk_start which is not worth a TPU kernel — see kernels/cox_coord.py).
+  * on TPU the compiled kernels run natively; elsewhere (this container)
+    they run in interpret mode for correctness (the kernels resolve
+    ``interpret=None`` backend-aware themselves);
+  * block sizes default to the autotuner's winners (kernels/autotune.py):
+    every dispatch looks up backend + kernel + power-of-two shape bucket
+    in the JSON tune cache and falls back to the historical static
+    defaults when the bucket is untuned. Pass an explicit block to pin;
+  * data with tied event times falls back to the pure-jnp Breslow
+    reference (the kernels implement the tie-free fast path; ties need a
+    gather at risk_start which is not worth a TPU kernel — see
+    kernels/cox_coord.py).
 """
 from __future__ import annotations
 
-from functools import partial
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
-from . import ref
+from . import autotune, ref
 from .cox_batch import cox_batch as _cox_batch_kernel
 from .cox_coord import cox_coord as _cox_coord_kernel
 from .revcumsum import revcumsum as _revcumsum_kernel
 from .survival_curves import survival_curves as _survival_curves_kernel
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-def revcumsum(x: jax.Array, block_n: int = 512) -> jax.Array:
+def revcumsum(x: jax.Array, block_n: Optional[int] = None) -> jax.Array:
     """Suffix sum along axis 0; accepts (n,) or (n, m)."""
     squeeze = x.ndim == 1
     x2 = x[:, None] if squeeze else x
-    out = _revcumsum_kernel(x2, block_n=block_n, interpret=_interpret())
+    if block_n is None:
+        block_n = autotune.lookup("revcumsum", n=x2.shape[0],
+                                  m=x2.shape[1])["block_n"]
+    out = _revcumsum_kernel(x2, block_n=block_n)
     return out[:, 0] if squeeze else out
 
 
 def cox_coord_grad_hess(eta: jax.Array, x: jax.Array, delta: jax.Array,
-                        order: int = 2, block: int = 1024):
+                        order: int = 2, block: Optional[int] = None):
     """Fused per-coordinate (g, h) — tie-free fast path."""
-    g, h, _ = _cox_coord_kernel(eta, x, delta, order=order, block=block,
-                                interpret=_interpret())
+    if block is None:
+        block = autotune.lookup("cox_coord", n=eta.shape[0])["block"]
+    g, h, _ = _cox_coord_kernel(eta, x, delta, order=order, block=block)
     return g, h
 
 
 def cox_coord_all(eta: jax.Array, x: jax.Array, delta: jax.Array,
-                  block: int = 1024):
+                  block: Optional[int] = None):
     """Fused per-coordinate (g, h, c3) including the third partial."""
-    return _cox_coord_kernel(eta, x, delta, order=3, block=block,
-                             interpret=_interpret())
+    if block is None:
+        block = autotune.lookup("cox_coord", n=eta.shape[0])["block"]
+    return _cox_coord_kernel(eta, x, delta, order=3, block=block)
 
 
 def cox_batch_grad_hess(eta: jax.Array, x: jax.Array, delta: jax.Array,
-                        block_n: int = 512, block_p: int = 256):
+                        block_n: Optional[int] = None,
+                        block_p: Optional[int] = None):
     """All-coordinate (grad, hess_diag) — tie-free fast path.
 
     Precomputes the O(n) vectors in jnp (one pass), then the O(np) panel
     work runs in the kernel.
     """
+    if block_n is None or block_p is None:
+        cfg = autotune.lookup("cox_batch", n=x.shape[0], p=x.shape[1])
+        block_n = cfg["block_n"] if block_n is None else block_n
+        block_p = cfg["block_p"] if block_p is None else block_p
     eta32 = eta.astype(jnp.float32)
     d32 = delta.astype(jnp.float32)
     w = jnp.exp(eta32 - jnp.max(eta32))
@@ -64,20 +76,28 @@ def cox_batch_grad_hess(eta: jax.Array, x: jax.Array, delta: jax.Array,
     wa = w * a
     r = wa - d32
     return _cox_batch_kernel(x, w, r, wa, d32, inv_s0,
-                             block_n=block_n, block_p=block_p,
-                             interpret=_interpret())
+                             block_n=block_n, block_p=block_p)
 
 
-def survival_curves(eta: jax.Array, h0: jax.Array, block_b: int = 256,
-                    block_g: int = 128) -> jax.Array:
+def survival_curves(eta: jax.Array, h0: jax.Array,
+                    block_b: Optional[int] = None,
+                    block_g: Optional[int] = None) -> jax.Array:
     """Fused (batch x grid) survival curves — the serving hot path."""
+    if block_b is None or block_g is None:
+        cfg = autotune.lookup("survival_curves", b=eta.shape[0],
+                              g=h0.shape[0])
+        block_b = cfg["block_b"] if block_b is None else block_b
+        block_g = cfg["block_g"] if block_g is None else block_g
     return _survival_curves_kernel(eta, h0, block_b=block_b,
-                                   block_g=block_g, interpret=_interpret())
+                                   block_g=block_g)
 
 
 def lipschitz_constants(x: jax.Array, delta: jax.Array,
-                        block_n: int = 512):
+                        block_n: Optional[int] = None):
     """(L2, L3) Theorem-3.4 constants — tie-free fast path."""
     from .lipschitz import lipschitz as _lips_kernel
 
-    return _lips_kernel(x, delta, block_n=block_n, interpret=_interpret())
+    if block_n is None:
+        block_n = autotune.lookup("lipschitz", n=x.shape[0],
+                                  m=x.shape[1])["block_n"]
+    return _lips_kernel(x, delta, block_n=block_n)

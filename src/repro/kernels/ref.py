@@ -48,3 +48,18 @@ def survival_curves_ref(eta: jax.Array, h0: jax.Array) -> jax.Array:
     """(b, g) S(t_g|x_b) = exp(-H0_g * exp(eta_b)), eta clipped to +/-30."""
     risk = jnp.exp(jnp.clip(eta.astype(jnp.float32), -30.0, 30.0))
     return jnp.exp(-risk[:, None] * h0.astype(jnp.float32)[None, :])
+
+
+def lipschitz_ref(x: jax.Array, delta: jax.Array):
+    """(L2, L3) Theorem-3.4 constants for a time-sorted tie-free panel."""
+    import numpy as np
+
+    x = x.astype(jnp.float32)
+    smax = jax.lax.associative_scan(jnp.maximum, x[::-1], axis=0)[::-1]
+    smin = jax.lax.associative_scan(jnp.minimum, x[::-1], axis=0)[::-1]
+    rng = smax - smin
+    d = delta.astype(jnp.float32)[:, None]
+    l2 = 0.25 * jnp.sum(d * rng * rng, axis=0)
+    l3 = jnp.float32(1.0 / (6.0 * np.sqrt(3.0))) * jnp.sum(
+        d * rng * rng * rng, axis=0)
+    return l2, l3

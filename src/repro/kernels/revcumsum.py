@@ -46,9 +46,7 @@ def _revcumsum_kernel(x_ref, o_ref, carry_ref):
 
 
 @functools.partial(jax.jit, static_argnames=("block_n", "interpret"))
-def revcumsum(x: jax.Array, block_n: int = 512,
-              interpret: bool = True) -> jax.Array:
-    """Suffix cumulative sum along axis 0 of a 2-D array via Pallas."""
+def _revcumsum_jit(x: jax.Array, block_n: int, interpret: bool) -> jax.Array:
     n, m = x.shape
     nb = pl.cdiv(n, block_n)
     pad = nb * block_n - n
@@ -64,3 +62,15 @@ def revcumsum(x: jax.Array, block_n: int = 512,
         interpret=interpret,
     )(xp)
     return out[:n]
+
+
+def revcumsum(x: jax.Array, block_n: int = 512,
+              interpret: bool | None = None) -> jax.Array:
+    """Suffix cumulative sum along axis 0 of a 2-D array via Pallas.
+
+    ``interpret=None`` (the default) resolves backend-aware: native on TPU,
+    interpret mode elsewhere. Pass an explicit bool to override (tests).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _revcumsum_jit(x, block_n=block_n, interpret=interpret)

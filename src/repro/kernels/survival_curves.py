@@ -33,13 +33,8 @@ def _curves_kernel(eta_ref, h0_ref, o_ref):
 
 @functools.partial(jax.jit,
                    static_argnames=("block_b", "block_g", "interpret"))
-def survival_curves(eta: jax.Array, h0: jax.Array, block_b: int = 256,
-                    block_g: int = 128, interpret: bool = True) -> jax.Array:
-    """(b, g) survival probabilities from risk scores and baseline hazard.
-
-    eta: (b,) linear predictors; h0: (g,) cumulative baseline hazard on the
-    model's time grid (must be >= 0 and nondecreasing).
-    """
+def _survival_curves_jit(eta: jax.Array, h0: jax.Array, block_b: int,
+                         block_g: int, interpret: bool) -> jax.Array:
     b, g = eta.shape[0], h0.shape[0]
     bb = pl.cdiv(b, block_b)
     gb = pl.cdiv(g, block_g)
@@ -61,3 +56,19 @@ def survival_curves(eta: jax.Array, h0: jax.Array, block_b: int = 256,
         interpret=interpret,
     )(etap.reshape(-1, 1), h0p.reshape(1, -1))
     return out[:b, :g]
+
+
+def survival_curves(eta: jax.Array, h0: jax.Array, block_b: int = 256,
+                    block_g: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """(b, g) survival probabilities from risk scores and baseline hazard.
+
+    eta: (b,) linear predictors; h0: (g,) cumulative baseline hazard on the
+    model's time grid (must be >= 0 and nondecreasing).
+    ``interpret=None`` resolves backend-aware: native on TPU, interpret
+    mode elsewhere. Pass an explicit bool to override (tests).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _survival_curves_jit(eta, h0, block_b=block_b, block_g=block_g,
+                                interpret=interpret)

@@ -1,0 +1,101 @@
+"""Runtime launch policy: env / XLA-flag / dtype tuning idioms.
+
+The HomebrewNLP-style recipe (SNIPPETS.md): tcmalloc preload, silenced
+TF/XLA logging, an explicit ``JAX_DEFAULT_DTYPE_BITS=32`` dtype policy,
+and merged (never clobbered) ``XLA_FLAGS``. ``apply()`` setdefaults the
+policy into ``os.environ`` and must run **before** jax is imported —
+``scripts/launch.sh`` applies the same policy from the shell, which is the
+only place the tcmalloc ``LD_PRELOAD`` can happen (a running process
+cannot re-preload its allocator; ``apply()`` just reports availability).
+
+Used by ``benchmarks/run.py`` and ``examples/serve_risk_api.py``; both log
+the effective environment via ``log()`` so every recorded benchmark is
+attributable to a concrete runtime configuration.
+"""
+from __future__ import annotations
+
+import os
+import sys
+from typing import Dict, Iterable, Optional
+
+TCMALLOC_PATHS = (
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4",
+    "/usr/lib/x86_64-linux-gnu/libtcmalloc_minimal.so.4",
+    "/usr/lib/libtcmalloc.so.4",
+    "/usr/lib/libtcmalloc_minimal.so.4",
+)
+
+ENV_DEFAULTS: Dict[str, str] = {
+    "TF_CPP_MIN_LOG_LEVEL": "4",               # silence TF/XLA chatter
+    "JAX_DEFAULT_DTYPE_BITS": "32",            # f32 policy, no implicit x64
+    "TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD": "60000000000",
+}
+
+# deployment-specific XLA flags go here (merged into $XLA_FLAGS, existing
+# user flags win); empty by default — the CPU container needs none
+XLA_FLAG_DEFAULTS: tuple = ()
+
+
+def find_tcmalloc() -> Optional[str]:
+    for p in TCMALLOC_PATHS:
+        if os.path.exists(p):
+            return p
+    return None
+
+
+def tcmalloc_active() -> bool:
+    return "tcmalloc" in os.environ.get("LD_PRELOAD", "")
+
+
+def apply(extra_env: Optional[Dict[str, str]] = None,
+          xla_flags: Iterable[str] = XLA_FLAG_DEFAULTS) -> Dict[str, str]:
+    """Setdefault the runtime policy into the environment.
+
+    Returns the keys actually set (existing values are never overridden).
+    Call before importing jax; a late call is detected and flagged in the
+    returned dict under ``"_late"`` since env-derived config (dtype bits,
+    XLA flags) is read at import/backend-init time.
+    """
+    applied: Dict[str, str] = {}
+    for k, v in {**ENV_DEFAULTS, **(extra_env or {})}.items():
+        if k not in os.environ:
+            os.environ[k] = v
+            applied[k] = v
+    merged = [f for f in xla_flags
+              if f not in os.environ.get("XLA_FLAGS", "")]
+    if merged:
+        flags = (os.environ.get("XLA_FLAGS", "") + " " + " ".join(merged))
+        os.environ["XLA_FLAGS"] = flags.strip()
+        applied["XLA_FLAGS"] = os.environ["XLA_FLAGS"]
+    if applied and "jax" in sys.modules:
+        applied["_late"] = "jax already imported; defaults may not apply"
+    return applied
+
+
+def describe() -> Dict[str, object]:
+    """The effective runtime environment (imports jax lazily)."""
+    import jax
+
+    tc = find_tcmalloc()
+    return {
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "jax_version": jax.__version__,
+        "ld_preload": os.environ.get("LD_PRELOAD", ""),
+        "tcmalloc": ("active" if tcmalloc_active()
+                     else f"available:{tc}" if tc else "absent"),
+        "xla_flags": os.environ.get("XLA_FLAGS", ""),
+        "env": {k: os.environ.get(k, "") for k in ENV_DEFAULTS},
+        "tune_cache": os.environ.get("REPRO_TUNE_CACHE", "(default)"),
+    }
+
+
+def log(prefix: str = "[runtime]") -> Dict[str, object]:
+    """Print and return the effective environment, one line per field."""
+    d = describe()
+    for k, v in d.items():
+        print(f"{prefix} {k}={v}", flush=True)
+    if not tcmalloc_active() and find_tcmalloc():
+        print(f"{prefix} note: tcmalloc present but not preloaded — "
+              "launch via scripts/launch.sh to enable it", flush=True)
+    return d
