@@ -12,11 +12,20 @@ artifacts) of the form::
 subsequent kernel dispatch uses them). ``--only`` takes a comma-separated
 subset, e.g. ``--only kernels,serving``.
 
+``--json`` additionally appends a ``telemetry/metrics_snapshot`` record:
+the full ``repro.obs`` registry snapshot (serving/kernel counters the
+benches accumulated, plus an instrumented convergence smoke fit), so
+each ``BENCH_*.json`` carries convergence-iteration counts and stage
+histograms alongside timings.
+
 ``--smoke`` is the CI guard: tier-1 pytest on the serving/kernels/autotune
 path, a tiny autotune sweep into a throwaway cache, the serving benchmark
-at tiny shapes with schema validation of its records, and a regression
+at tiny shapes with schema validation of its records, a regression
 gate on ``serving/batch_speedup`` against the committed ``BENCH_*.json``
-baseline when one exists — all in well under a minute.
+baseline when one exists, and a telemetry gate — the embedded metrics
+snapshot must validate against its schema and the instrumented smoke fit
+must record **zero monotonicity violations** — all in well under a
+minute.
 
 Runnable both as ``python -m benchmarks.run`` (with ``PYTHONPATH=src``)
 and directly as ``python benchmarks/run.py``.
@@ -43,7 +52,7 @@ RECORD_REQUIRED = {
     "tuned_blocks": dict,
     "git_rev": str,
 }
-RECORD_OPTIONAL = {"value": (int, float)}
+RECORD_OPTIONAL = {"value": (int, float), "metrics": dict}
 
 # smoke gate: fail when serving/batch_speedup drops below this fraction
 # of the committed baseline
@@ -146,6 +155,85 @@ def validate_records(records):
     return errors
 
 
+def validate_metrics_snapshot(snap):
+    """Schema errors for an obs Registry.snapshot() embedding ([] = valid).
+
+    Shape: ``{"counters"|"gauges": {name: {label_str: number}},
+    "histograms": {name: {"buckets": [num...], "series":
+    {label_str: {"counts": [int...], "sum": num, "count": int}}}}``.
+    """
+    errors = []
+    if not isinstance(snap, dict):
+        return ["metrics snapshot must be an object"]
+    for group in ("counters", "gauges", "histograms"):
+        if group not in snap or not isinstance(snap[group], dict):
+            errors.append(f"metrics: missing/invalid group '{group}'")
+    for group in ("counters", "gauges"):
+        series_by_name = snap.get(group)
+        if not isinstance(series_by_name, dict):
+            continue
+        for name, series in series_by_name.items():
+            if not isinstance(series, dict) or not all(
+                    isinstance(v, (int, float)) for v in series.values()):
+                errors.append(f"metrics: {group}/{name} series not "
+                              "label->number")
+    hists = snap.get("histograms")
+    for name, h in (hists.items() if isinstance(hists, dict) else ()):
+        if not isinstance(h, dict) or not isinstance(h.get("buckets"), list):
+            errors.append(f"metrics: histograms/{name} missing buckets")
+            continue
+        series = h.get("series")
+        for label, s in (series.items() if isinstance(series, dict) else ()):
+            ok = (isinstance(s, dict) and isinstance(s.get("counts"), list)
+                  and isinstance(s.get("sum"), (int, float))
+                  and isinstance(s.get("count"), int)
+                  and len(s["counts"]) == len(h["buckets"]) + 1)
+            if not ok:
+                errors.append(
+                    f"metrics: histograms/{name}[{label!r}] malformed")
+    return errors
+
+
+def _solver_violations(snap) -> float:
+    counters = snap.get("counters", {})
+    series = counters.get("solver_monotonicity_violations_total", {})
+    return sum(series.values()) if isinstance(series, dict) else 0.0
+
+
+def _telemetry_record(backend, tuned, git_rev, n_iters=25):
+    """Instrumented smoke fit + full registry snapshot as a bench record.
+
+    Runs ``fit_cd_tol`` on a small synthetic problem with a
+    ``TelemetryCallback``, so the embedded snapshot carries convergence
+    iteration counts and the monotonicity-violation counter alongside
+    whatever serving/kernel metrics the benches accumulated.
+    """
+    import jax
+
+    from repro.core import cox, solvers
+    from repro.data.synthetic import SyntheticSpec, make_correlated_survival
+    from repro.obs import REGISTRY, TelemetryCallback
+
+    x, t, delta, _ = make_correlated_survival(
+        SyntheticSpec(n=200, p=20, k=4, rho=0.3, seed=0))
+    data = cox.prepare(x, t, delta)
+    tel = TelemetryCallback("cd_quad_smoke")
+    res = solvers.fit_cd_tol(data, 0.1, 0.5, max_iters=n_iters,
+                             telemetry=tel)
+    res.beta.block_until_ready()
+    jax.effects_barrier()          # flush the debug callbacks
+    snap = REGISTRY.snapshot()
+    return {
+        "bench": "telemetry", "name": "metrics_snapshot",
+        "us_per_call": 0.0,
+        "derived": (f"smoke_fit_iters={tel.iterations} "
+                    f"violations={tel.violations}"),
+        "value": float(tel.violations),
+        "backend": backend, "tuned_blocks": tuned, "git_rev": git_rev,
+        "metrics": snap,
+    }
+
+
 def _baseline_record(bench, name):
     """Matching record from the newest committed BENCH_*.json, if any."""
     paths = sorted(glob.glob(os.path.join(ROOT, "BENCH_*.json")))
@@ -237,6 +325,24 @@ def _smoke() -> int:
     else:
         print("[smoke] no committed BENCH_*.json baseline — "
               "regression gate skipped")
+
+    # telemetry gate: an instrumented smoke fit must record zero
+    # monotonicity violations, and its snapshot must satisfy the schema
+    tel_rec = _telemetry_record(backend, tuned, rev)
+    errors = (validate_records([tel_rec])
+              + validate_metrics_snapshot(tel_rec["metrics"]))
+    if errors:
+        print("[smoke] FAILED: telemetry snapshot violates schema:")
+        for e in errors:
+            print(f"[smoke]   {e}")
+        return 1
+    violations = _solver_violations(tel_rec["metrics"])
+    if violations > 0:
+        print(f"[smoke] FAILED: {int(violations)} monotonicity "
+              "violation(s) recorded during the smoke fit — the "
+              "surrogate descent guarantee is broken")
+        return 1
+    print(f"[smoke] telemetry ok ({tel_rec['derived']})")
     print("[smoke] OK")
     return 0
 
@@ -289,6 +395,15 @@ def main() -> None:
             rows = list(benches["serving"](smoke=True))
             records += make_records("serving_smoke", rows, backend, tuned,
                                     rev)
+        # embed the metrics snapshot (serving/kernel counters accumulated
+        # by the benches + an instrumented convergence smoke fit)
+        tel_rec = _telemetry_record(backend, tuned, rev)
+        merrors = validate_metrics_snapshot(tel_rec["metrics"])
+        if merrors:
+            for e in merrors:
+                print(f"[json] schema error: {e}", file=sys.stderr)
+            sys.exit(1)
+        records.append(tel_rec)
         errors = validate_records(records)
         if errors:
             for e in errors:

@@ -6,9 +6,15 @@ on a time grid), round-trips it through save/load, and serves risk /
 median-survival queries through the continuous-batching RiskService —
 the O(k)-per-request payoff of very sparse CPH models.
 
+Telemetry is on by default here: spans go to ``$REPRO_TRACE_FILE`` when
+set, else to ``serve_risk_api_trace.jsonl`` in the working directory, and
+the run ends with the per-stage latency-breakdown table (queue wait vs
+batch formation vs jit dispatch) rendered from that file.
+
     PYTHONPATH=src python examples/serve_risk_api.py
 (or, with tcmalloc + the full env policy: scripts/launch.sh examples/serve_risk_api.py)
 """
+import os
 import tempfile
 
 from repro.launch import runtime
@@ -17,13 +23,22 @@ runtime.apply()   # env/XLA/dtype policy before jax initializes
 
 import numpy as np
 
+from repro.analysis.report import latency_breakdown_table
 from repro.core import beam, cox
 from repro.data.synthetic import SyntheticSpec, make_correlated_survival
+from repro.obs import trace
 from repro.serving import (RiskService, ScoringEngine, SurvivalModel,
                            fit_survival_model)
 
 
 def main():
+    trace_path = os.environ.get("REPRO_TRACE_FILE",
+                                "serve_risk_api_trace.jsonl")
+    if not os.environ.get("REPRO_TRACE_FILE"):
+        if os.path.exists(trace_path):
+            os.remove(trace_path)
+        trace.configure(trace_path)
+    print(f"[trace] spans -> {trace_path}")
     runtime.log()
     spec = SyntheticSpec(n=400, p=120, k=4, rho=0.7, seed=3,
                          censor_scale=3.0)
@@ -58,10 +73,16 @@ def main():
     print(f"[serve] {st['n_requests']} requests in {st['wall_s']*1e3:.1f}ms "
           f"({st['reqs_per_s']:.0f} req/s, mean batch "
           f"{st['mean_batch']:.1f}, p50 {st['latency_p50_ms']:.2f}ms, "
-          f"p99 {st['latency_p99_ms']:.2f}ms)")
+          f"p99 {st['latency_p99_ms']:.2f}ms, queue_depth "
+          f"{st['queue_depth']}, rejected {st['rejected_count']}, "
+          f"timeouts {st['timeout_count']})")
     for r in responses[:3]:
         med = "inf" if np.isinf(r.median) else f"{r.median:.3f}"
-        print(f"  req {r.rid}: risk={r.risk:.3f} median_survival={med}")
+        print(f"  req {r.rid}: risk={r.risk:.3f} median_survival={med} "
+              f"trace={r.trace_id}")
+
+    print("\nPer-stage latency breakdown (telemetry spans):\n")
+    print(latency_breakdown_table(trace_path))
     return responses
 
 

@@ -89,6 +89,41 @@ def serving_kernel_table():
     return "\n".join(rows)
 
 
+def latency_breakdown_table(trace_path):
+    """Per-stage latency breakdown from a span JSONL file (obs.trace).
+
+    One row per span name: call count, total/mean/p50/p99 milliseconds,
+    and share of the summed root-span time — the table that attributes
+    serving p99 to queueing vs batch formation vs jit dispatch.
+    """
+    import numpy as np
+
+    from ..obs import events as obs_events
+
+    spans = [r for r in obs_events.read_jsonl(trace_path)
+             if r.get("kind") == "span" and "dur_s" in r]
+    rows = ["| stage | count | total ms | mean ms | p50 ms | p99 ms | "
+            "% of root |",
+            "|---|---|---|---|---|---|---|"]
+    if not spans:
+        rows.append(f"| (no spans in {os.path.basename(str(trace_path))} — "
+                    "set $REPRO_TRACE_FILE and re-run) | | | | | | |")
+        return "\n".join(rows)
+    root_total = sum(s["dur_s"] for s in spans if s.get("parent_id") is None)
+    by_name = {}
+    for s in spans:
+        by_name.setdefault(s["name"], []).append(s["dur_s"] * 1e3)
+    for name in sorted(by_name,
+                       key=lambda n: -float(np.sum(by_name[n]))):
+        d = np.asarray(by_name[name])
+        pct = (d.sum() / (root_total * 1e3) * 100.0) if root_total > 0 \
+            else 0.0
+        rows.append(f"| {name} | {len(d)} | {d.sum():.2f} "
+                    f"| {d.mean():.3f} | {np.percentile(d, 50):.3f} "
+                    f"| {np.percentile(d, 99):.3f} | {pct:.1f} |")
+    return "\n".join(rows)
+
+
 def tuned_blocks_table(cache_path=None):
     """Autotune winners vs the static default blocks, per backend/bucket.
 
@@ -130,6 +165,9 @@ def main():
     ap.add_argument("--tune-cache", default=os.path.join(
         os.path.dirname(__file__), "..", "..", "..", "benchmarks",
         "tuned_blocks.json"))
+    ap.add_argument("--trace", default=os.environ.get("REPRO_TRACE_FILE"),
+                    help="span JSONL (obs.trace) to summarize into the "
+                         "latency-breakdown table")
     args = ap.parse_args()
     recs = load(args.dir)
     print("## Dry-run (single pod 16x16)\n")
@@ -142,6 +180,9 @@ def main():
     print(serving_kernel_table())
     print("\n## Tuned kernel blocks (autotune winners vs defaults)\n")
     print(tuned_blocks_table(args.tune_cache))
+    if args.trace and os.path.exists(args.trace):
+        print("\n## Per-stage latency breakdown (telemetry spans)\n")
+        print(latency_breakdown_table(args.trace))
 
 
 if __name__ == "__main__":

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import cox, surrogate
+from ..obs import trace
 
 Array = jax.Array
 
@@ -101,8 +102,16 @@ def finetune(data: cox.CoxData, support_idx: Array, support_mask: Array,
 
 def beam_search(data: cox.CoxData, k: int, beam_width: int = 5,
                 n_expand: int = 8, lam2: float = 1e-3,
-                score_steps: int = 4, finetune_sweeps: int = 60) -> BeamResult:
-    """Grow supports 1..k, keeping the ``beam_width`` best at each size."""
+                score_steps: int = 4, finetune_sweeps: int = 60,
+                telemetry=None) -> BeamResult:
+    """Grow supports 1..k, keeping the ``beam_width`` best at each size.
+
+    The outer loop is host-driven, so telemetry is recorded directly (no
+    debug callbacks): nested ``beam.score`` / ``beam.finetune`` spans
+    around the jitted inner stages and a ``beam.size`` span per support
+    size carrying the candidate count and best loss. Pass an
+    ``obs.TelemetryCallback`` to additionally emit a tagged ``beam.size``
+    event per size (candidates, best loss, chosen support)."""
     l2c, _ = cox.lipschitz_constants(data)
     p = data.p
     # beams: list of (loss, support tuple, eta, beta_s padded)
@@ -110,39 +119,52 @@ def beam_search(data: cox.CoxData, k: int, beam_width: int = 5,
               (), jnp.zeros(data.n, data.x.dtype))]
     out = BeamResult(supports=[], betas=[], losses=[])
 
-    for size in range(1, k + 1):
-        candidates = {}
-        for loss_b, supp, eta_b in beams:
-            mask = np.zeros(p, dtype=bool)
-            mask[list(supp)] = True
-            dec, _ = score_candidates(data, eta_b, l2c, lam2,
-                                      jnp.asarray(mask), steps=score_steps)
-            top = np.argsort(-np.asarray(dec))[:n_expand]
-            for l in top:
-                new_supp = tuple(sorted(supp + (int(l),)))
-                if new_supp in candidates:
-                    continue
-                candidates[new_supp] = True
-        # finetune every unique candidate support
-        scored = []
-        for new_supp in candidates:
-            idx = np.zeros(k, dtype=np.int32)
-            msk = np.zeros(k, dtype=np.float32)
-            idx[: len(new_supp)] = np.asarray(new_supp, np.int32)
-            msk[: len(new_supp)] = 1.0
-            beta_s, eta, loss = finetune(
-                data, jnp.asarray(idx), jnp.asarray(msk), lam2, k,
-                n_sweeps=finetune_sweeps)
-            scored.append((float(loss), new_supp, eta, np.asarray(beta_s),
-                           idx))
-        scored.sort(key=lambda s: s[0])
-        beams = [(s[0], s[1], s[2]) for s in scored[:beam_width]]
-        best = scored[0]
-        beta_dense = np.zeros(p, dtype=np.float32)
-        beta_dense[best[4][: len(best[1])]] = best[3][: len(best[1])]
-        out.supports.append(np.asarray(best[1], np.int64))
-        out.betas.append(beta_dense)
-        out.losses.append(best[0])
+    with trace.span("beam.search", k=k, beam_width=beam_width, p=p):
+        for size in range(1, k + 1):
+            with trace.span("beam.size", size=size) as size_span:
+                candidates = {}
+                with trace.span("beam.score", n_beams=len(beams)):
+                    for loss_b, supp, eta_b in beams:
+                        mask = np.zeros(p, dtype=bool)
+                        mask[list(supp)] = True
+                        dec, _ = score_candidates(data, eta_b, l2c, lam2,
+                                                  jnp.asarray(mask),
+                                                  steps=score_steps)
+                        top = np.argsort(-np.asarray(dec))[:n_expand]
+                        for l in top:
+                            new_supp = tuple(sorted(supp + (int(l),)))
+                            if new_supp in candidates:
+                                continue
+                            candidates[new_supp] = True
+                # finetune every unique candidate support
+                scored = []
+                with trace.span("beam.finetune",
+                                n_candidates=len(candidates)):
+                    for new_supp in candidates:
+                        idx = np.zeros(k, dtype=np.int32)
+                        msk = np.zeros(k, dtype=np.float32)
+                        idx[: len(new_supp)] = np.asarray(new_supp, np.int32)
+                        msk[: len(new_supp)] = 1.0
+                        beta_s, eta, loss = finetune(
+                            data, jnp.asarray(idx), jnp.asarray(msk), lam2,
+                            k, n_sweeps=finetune_sweeps)
+                        scored.append((float(loss), new_supp, eta,
+                                       np.asarray(beta_s), idx))
+                scored.sort(key=lambda s: s[0])
+                beams = [(s[0], s[1], s[2]) for s in scored[:beam_width]]
+                best = scored[0]
+                beta_dense = np.zeros(p, dtype=np.float32)
+                beta_dense[best[4][: len(best[1])]] = best[3][: len(best[1])]
+                out.supports.append(np.asarray(best[1], np.int64))
+                out.betas.append(beta_dense)
+                out.losses.append(best[0])
+                size_span.set(n_candidates=len(candidates),
+                              best_loss=best[0])
+                if telemetry is not None:
+                    telemetry.record_event(
+                        "beam.size", size=size,
+                        n_candidates=len(candidates), best_loss=best[0],
+                        support=list(map(int, best[1])))
     return out
 
 

@@ -17,6 +17,15 @@ Baselines (Section 2):
 
 Every solver minimizes  loss(beta) + lam1 ||beta||_1 + lam2 ||beta||_2^2
 and returns the objective trace so benchmarks can reproduce Fig. 1 / App. D.
+
+Telemetry: every fit function takes a static ``telemetry`` argument (an
+``obs.TelemetryCallback`` or None). When set, each outer iteration emits
+(objective, smooth-part gradient norm, ||step||, nnz(beta)) to the host
+via ``jax.debug.callback``, and consecutive objective increases beyond
+the callback's tol are counted as monotonicity violations — the paper's
+descent guarantee as a production invariant. ``telemetry=None`` (the
+default) traces the exact pre-telemetry graph: no callback op, no extra
+gradient evaluations. Reuse one instance per solver to avoid retraces.
 """
 from __future__ import annotations
 
@@ -28,6 +37,7 @@ import jax
 import jax.numpy as jnp
 
 from . import cox, surrogate
+from ..obs import solver as obs_solver
 
 Array = jax.Array
 
@@ -42,6 +52,21 @@ class FitResult:
 
 def _objective(data: cox.CoxData, eta: Array, beta: Array, lam1, lam2) -> Array:
     return cox.loss_from_eta(data, eta) + cox.penalty(beta, lam1, lam2)
+
+
+def _emit(telemetry, data, it, eta, beta, beta_prev, obj, lam2) -> None:
+    """Stage one telemetry callback (traced code; no-op when disabled).
+
+    Gradient norm is of the smooth part (loss + l2) — the standard
+    convergence diagnostic that exists for every solver here, l1 or not.
+    The extra ``grad_all`` is only paid when telemetry is on.
+    """
+    if telemetry is None:
+        return
+    g = cox.grad_all(data, eta) + 2.0 * lam2 * beta
+    obs_solver.emit_iter(telemetry, it, obj, jnp.linalg.norm(g),
+                         jnp.linalg.norm(beta - beta_prev),
+                         jnp.sum(beta != 0))
 
 
 # ---------------------------------------------------------------------------
@@ -78,10 +103,12 @@ def _cd_sweep(data: cox.CoxData, eta: Array, beta: Array, l2c: Array,
     return jax.lax.fori_loop(0, data.p, body, (eta, beta))
 
 
-@partial(jax.jit, static_argnames=("n_iters", "method", "use_kernel"))
+@partial(jax.jit, static_argnames=("n_iters", "method", "use_kernel",
+                                   "telemetry"))
 def fit_cd(data: cox.CoxData, lam1: float = 0.0, lam2: float = 0.0,
            n_iters: int = 100, beta0: Optional[Array] = None,
-           method: str = "cd_quad", use_kernel: bool = False) -> FitResult:
+           method: str = "cd_quad", use_kernel: bool = False,
+           telemetry=None) -> FitResult:
     """FastSurvival coordinate descent (quadratic or cubic surrogate).
 
     use_kernel=True routes the per-coordinate derivatives through the fused
@@ -92,21 +119,25 @@ def fit_cd(data: cox.CoxData, lam1: float = 0.0, lam2: float = 0.0,
     eta = data.x @ beta
     l2c, l3c = cox.lipschitz_constants(data)
 
-    def step(carry, _):
+    def step(carry, it):
         eta, beta = carry
+        beta_prev = beta
         eta, beta = _cd_sweep(data, eta, beta, l2c, l3c, lam1, lam2, cubic,
                               use_kernel=use_kernel)
-        return (eta, beta), _objective(data, eta, beta, lam1, lam2)
+        obj = _objective(data, eta, beta, lam1, lam2)
+        _emit(telemetry, data, it, eta, beta, beta_prev, obj, lam2)
+        return (eta, beta), obj
 
-    (eta, beta), obj = jax.lax.scan(step, (eta, beta), None, length=n_iters)
+    (eta, beta), obj = jax.lax.scan(step, (eta, beta),
+                                    jnp.arange(n_iters))
     return FitResult(beta=beta, objective=obj, n_iters=jnp.int32(n_iters))
 
 
-@partial(jax.jit, static_argnames=("max_iters", "method"))
+@partial(jax.jit, static_argnames=("max_iters", "method", "telemetry"))
 def fit_cd_tol(data: cox.CoxData, lam1: float = 0.0, lam2: float = 0.0,
                max_iters: int = 200, tol: float = 1e-7,
                beta0: Optional[Array] = None,
-               method: str = "cd_quad") -> FitResult:
+               method: str = "cd_quad", telemetry=None) -> FitResult:
     """Early-stopping variant (while_loop): stops when the objective
     decrease over one sweep falls below ``tol`` (monotonicity is guaranteed
     by the surrogate majorization, so this is a sound criterion)."""
@@ -122,8 +153,11 @@ def fit_cd_tol(data: cox.CoxData, lam1: float = 0.0, lam2: float = 0.0,
 
     def body(state):
         eta, beta, _, cur, it = state
+        beta_prev = beta
         eta, beta = _cd_sweep(data, eta, beta, l2c, l3c, lam1, lam2, cubic)
-        return eta, beta, cur, _objective(data, eta, beta, lam1, lam2), it + 1
+        obj = _objective(data, eta, beta, lam1, lam2)
+        _emit(telemetry, data, it, eta, beta, beta_prev, obj, lam2)
+        return eta, beta, cur, obj, it + 1
 
     state = (eta, beta, f0 + 2.0 * tol + 1.0, f0, jnp.int32(0))
     eta, beta, _, cur, it = jax.lax.while_loop(cond, body, state)
@@ -141,16 +175,17 @@ def _newton_direction(data, eta, beta, lam2) -> Tuple[Array, Array]:
     return jnp.linalg.solve(h, -g), g
 
 
-@partial(jax.jit, static_argnames=("n_iters", "line_search"))
+@partial(jax.jit, static_argnames=("n_iters", "line_search", "telemetry"))
 def fit_newton(data: cox.CoxData, lam2: float = 0.0, n_iters: int = 50,
                beta0: Optional[Array] = None,
-               line_search: bool = False) -> FitResult:
+               line_search: bool = False, telemetry=None) -> FitResult:
     """Exact Newton (lam1 unsupported, as in the paper). ``line_search=True``
     adds Armijo backtracking and serves as the high-precision reference."""
     beta = jnp.zeros(data.p, data.x.dtype) if beta0 is None else beta0
 
-    def step(carry, _):
+    def step(carry, it):
         beta = carry
+        beta_prev = beta
         eta = data.x @ beta
         d, g = _newton_direction(data, eta, beta, lam2)
         if line_search:
@@ -173,9 +208,11 @@ def fit_newton(data: cox.CoxData, lam2: float = 0.0, n_iters: int = 50,
         else:
             beta = beta + d
         eta = data.x @ beta
-        return beta, _objective(data, eta, beta, 0.0, lam2)
+        obj = _objective(data, eta, beta, 0.0, lam2)
+        _emit(telemetry, data, it, eta, beta, beta_prev, obj, lam2)
+        return beta, obj
 
-    beta, obj = jax.lax.scan(step, beta, None, length=n_iters)
+    beta, obj = jax.lax.scan(step, beta, jnp.arange(n_iters))
     return FitResult(beta=beta, objective=obj, n_iters=jnp.int32(n_iters))
 
 
@@ -205,16 +242,18 @@ def _inner_cd_quadratic(data: cox.CoxData, dvec: Array, g: Array, beta: Array,
     return delta
 
 
-@partial(jax.jit, static_argnames=("n_iters", "variant", "inner_sweeps"))
+@partial(jax.jit, static_argnames=("n_iters", "variant", "inner_sweeps",
+                                   "telemetry"))
 def fit_working_newton(data: cox.CoxData, lam1: float = 0.0, lam2: float = 0.0,
                        n_iters: int = 50, beta0: Optional[Array] = None,
                        variant: str = "quasi",
-                       inner_sweeps: int = 3) -> FitResult:
+                       inner_sweeps: int = 3, telemetry=None) -> FitResult:
     """quasi_newton (Simon et al. 2011) / prox_newton (skglm) baselines."""
     beta = jnp.zeros(data.p, data.x.dtype) if beta0 is None else beta0
 
-    def step(carry, _):
+    def step(carry, it):
         beta = carry
+        beta_prev = beta
         eta = data.x @ beta
         g = cox.grad_all(data, eta)
         if variant == "quasi":
@@ -225,30 +264,38 @@ def fit_working_newton(data: cox.CoxData, lam1: float = 0.0, lam2: float = 0.0,
         delta = _inner_cd_quadratic(data, dvec, g, beta, lam1, lam2,
                                     inner_sweeps)
         beta = beta + delta
-        return beta, _objective(data, data.x @ beta, beta, lam1, lam2)
+        eta = data.x @ beta
+        obj = _objective(data, eta, beta, lam1, lam2)
+        _emit(telemetry, data, it, eta, beta, beta_prev, obj, lam2)
+        return beta, obj
 
-    beta, obj = jax.lax.scan(step, beta, None, length=n_iters)
+    beta, obj = jax.lax.scan(step, beta, jnp.arange(n_iters))
     return FitResult(beta=beta, objective=obj, n_iters=jnp.int32(n_iters))
 
 
-@partial(jax.jit, static_argnames=("n_iters",))
+@partial(jax.jit, static_argnames=("n_iters", "telemetry"))
 def fit_gd(data: cox.CoxData, lam1: float = 0.0, lam2: float = 0.0,
-           n_iters: int = 200, beta0: Optional[Array] = None) -> FitResult:
+           n_iters: int = 200, beta0: Optional[Array] = None,
+           telemetry=None) -> FitResult:
     """Proximal gradient (ISTA) with the paper-derived global step 1/L,
     L = sum_l L2_l + 2 lam2 (trace bound on the Hessian spectrum)."""
     beta = jnp.zeros(data.p, data.x.dtype) if beta0 is None else beta0
     l2c, _ = cox.lipschitz_constants(data)
     lr = 1.0 / (jnp.sum(l2c) + 2.0 * lam2 + 1e-12)
 
-    def step(carry, _):
+    def step(carry, it):
         beta = carry
+        beta_prev = beta
         eta = data.x @ beta
         g = cox.grad_all(data, eta) + 2.0 * lam2 * beta
         z = beta - lr * g
         beta = jnp.sign(z) * jnp.maximum(jnp.abs(z) - lr * lam1, 0.0)
-        return beta, _objective(data, data.x @ beta, beta, lam1, lam2)
+        eta = data.x @ beta
+        obj = _objective(data, eta, beta, lam1, lam2)
+        _emit(telemetry, data, it, eta, beta, beta_prev, obj, lam2)
+        return beta, obj
 
-    beta, obj = jax.lax.scan(step, beta, None, length=n_iters)
+    beta, obj = jax.lax.scan(step, beta, jnp.arange(n_iters))
     return FitResult(beta=beta, objective=obj, n_iters=jnp.int32(n_iters))
 
 

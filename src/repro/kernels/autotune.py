@@ -27,6 +27,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from ..obs import events as obs_events
+from ..obs import profile as obs_profile
 from .cox_batch import cox_batch
 from .cox_coord import cox_coord
 from .lipschitz import lipschitz
@@ -159,17 +161,25 @@ def save_cache(entries: Dict[str, dict], path: Optional[str] = None) -> str:
     return path
 
 
-def lookup(kernel: str, cache_file: Optional[str] = None,
-           **shape: int) -> Dict[str, int]:
-    """Tuned block config for ``kernel`` at ``shape`` — the dispatch read.
+def lookup_tagged(kernel: str, cache_file: Optional[str] = None,
+                  **shape: int) -> Tuple[Dict[str, int], str]:
+    """(config, provenance) for ``kernel`` at ``shape`` — the dispatch read.
 
-    Falls back to ``DEFAULT_CONFIGS[kernel]`` when the bucket is untuned
-    (or no cache exists). Never times anything.
+    Provenance is ``"tuned"`` when the bucket has a cached winner and
+    ``"default"`` on the static fallback; ``ops.py`` tags its per-kernel
+    dispatch counters with it, so an untuned fleet shows up in metrics
+    rather than silently running default blocks. Never times anything.
     """
     entry = load_cache(cache_file).get(bucket_key(kernel, shape))
     if entry and isinstance(entry.get("config"), dict):
-        return dict(entry["config"])
-    return dict(DEFAULT_CONFIGS[kernel])
+        return dict(entry["config"]), "tuned"
+    return dict(DEFAULT_CONFIGS[kernel]), "default"
+
+
+def lookup(kernel: str, cache_file: Optional[str] = None,
+           **shape: int) -> Dict[str, int]:
+    """Tuned block config (``DEFAULT_CONFIGS`` fallback); see lookup_tagged."""
+    return lookup_tagged(kernel, cache_file, **shape)[0]
 
 
 # -- timing -----------------------------------------------------------------
@@ -269,13 +279,17 @@ def autotune(kernel: str, shape: Dict[str, int], *,
 
     inputs = _build_inputs(kernel, shape)
     timings: Dict[str, dict] = {}
-    for cfg in candidates_for(kernel, shape):
-        us = _time_call(
-            lambda cfg=cfg: run_config(kernel, inputs, cfg, interpret),
-            reps=reps)
-        timings[_cfg_key(cfg)] = {"config": cfg, "us": us}
-        if verbose:
-            print(f"[autotune] {key} {_cfg_key(cfg)} {us:.1f}us", flush=True)
+    # $REPRO_PROFILE_DIR captures the candidate timing as a TensorBoard
+    # trace, one capture per (kernel, bucket); no-op when unset
+    with obs_profile.maybe_profile(f"autotune/{key}"):
+        for cfg in candidates_for(kernel, shape):
+            us = _time_call(
+                lambda cfg=cfg: run_config(kernel, inputs, cfg, interpret),
+                reps=reps)
+            timings[_cfg_key(cfg)] = {"config": cfg, "us": us}
+            if verbose:
+                print(f"[autotune] {key} {_cfg_key(cfg)} {us:.1f}us",
+                      flush=True)
     best = min(timings.values(), key=lambda e: e["us"])
     entry = {
         "kernel": kernel,
@@ -291,6 +305,8 @@ def autotune(kernel: str, shape: Dict[str, int], *,
     entries[key] = entry
     save_cache(entries, path)
     _register(key, entry)
+    obs_events.emit("autotune.winner", key=key, config=best["config"],
+                    us=best["us"], default_us=entry["default_us"])
     if verbose:
         print(f"[autotune] {key} winner {_cfg_key(best['config'])} "
               f"({best['us']:.1f}us vs default "

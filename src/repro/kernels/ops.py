@@ -12,6 +12,13 @@ Selection logic:
     reference (the kernels implement the tie-free fast path; ties need a
     gather at risk_start which is not worth a TPU kernel — see
     kernels/cox_coord.py).
+
+Telemetry: every dispatch increments ``kernel_dispatch_total`` labelled
+with the kernel name and block provenance (``tuned`` cache hit /
+``default`` static fallback / ``explicit`` caller-pinned). Counts are
+dispatch-side: a kernel traced once inside an outer ``jit`` counts once
+per compilation, eager callers count per call — either way, a fleet
+silently running default blocks is visible in the metrics.
 """
 from __future__ import annotations
 
@@ -20,20 +27,36 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from ..obs import metrics as obs_metrics
 from . import autotune, ref
 from .cox_batch import cox_batch as _cox_batch_kernel
 from .cox_coord import cox_coord as _cox_coord_kernel
 from .revcumsum import revcumsum as _revcumsum_kernel
 from .survival_curves import survival_curves as _survival_curves_kernel
 
+_M_DISPATCH = obs_metrics.REGISTRY.counter(
+    "kernel_dispatch_total", "Pallas kernel dispatches by block provenance",
+    ("kernel", "blocks"))
+
+
+def _blocks(kernel: str, explicit: bool, **shape):
+    """Resolve blocks + count the dispatch under its provenance tag."""
+    if explicit:
+        _M_DISPATCH.inc(kernel=kernel, blocks="explicit")
+        return None
+    cfg, tag = autotune.lookup_tagged(kernel, **shape)
+    _M_DISPATCH.inc(kernel=kernel, blocks=tag)
+    return cfg
+
 
 def revcumsum(x: jax.Array, block_n: Optional[int] = None) -> jax.Array:
     """Suffix sum along axis 0; accepts (n,) or (n, m)."""
     squeeze = x.ndim == 1
     x2 = x[:, None] if squeeze else x
+    cfg = _blocks("revcumsum", block_n is not None,
+                  n=x2.shape[0], m=x2.shape[1])
     if block_n is None:
-        block_n = autotune.lookup("revcumsum", n=x2.shape[0],
-                                  m=x2.shape[1])["block_n"]
+        block_n = cfg["block_n"]
     out = _revcumsum_kernel(x2, block_n=block_n)
     return out[:, 0] if squeeze else out
 
@@ -41,8 +64,9 @@ def revcumsum(x: jax.Array, block_n: Optional[int] = None) -> jax.Array:
 def cox_coord_grad_hess(eta: jax.Array, x: jax.Array, delta: jax.Array,
                         order: int = 2, block: Optional[int] = None):
     """Fused per-coordinate (g, h) — tie-free fast path."""
+    cfg = _blocks("cox_coord", block is not None, n=eta.shape[0])
     if block is None:
-        block = autotune.lookup("cox_coord", n=eta.shape[0])["block"]
+        block = cfg["block"]
     g, h, _ = _cox_coord_kernel(eta, x, delta, order=order, block=block)
     return g, h
 
@@ -50,8 +74,9 @@ def cox_coord_grad_hess(eta: jax.Array, x: jax.Array, delta: jax.Array,
 def cox_coord_all(eta: jax.Array, x: jax.Array, delta: jax.Array,
                   block: Optional[int] = None):
     """Fused per-coordinate (g, h, c3) including the third partial."""
+    cfg = _blocks("cox_coord", block is not None, n=eta.shape[0])
     if block is None:
-        block = autotune.lookup("cox_coord", n=eta.shape[0])["block"]
+        block = cfg["block"]
     return _cox_coord_kernel(eta, x, delta, order=3, block=block)
 
 
@@ -63,8 +88,9 @@ def cox_batch_grad_hess(eta: jax.Array, x: jax.Array, delta: jax.Array,
     Precomputes the O(n) vectors in jnp (one pass), then the O(np) panel
     work runs in the kernel.
     """
+    cfg = _blocks("cox_batch", block_n is not None and block_p is not None,
+                  n=x.shape[0], p=x.shape[1])
     if block_n is None or block_p is None:
-        cfg = autotune.lookup("cox_batch", n=x.shape[0], p=x.shape[1])
         block_n = cfg["block_n"] if block_n is None else block_n
         block_p = cfg["block_p"] if block_p is None else block_p
     eta32 = eta.astype(jnp.float32)
@@ -83,9 +109,10 @@ def survival_curves(eta: jax.Array, h0: jax.Array,
                     block_b: Optional[int] = None,
                     block_g: Optional[int] = None) -> jax.Array:
     """Fused (batch x grid) survival curves — the serving hot path."""
+    cfg = _blocks("survival_curves",
+                  block_b is not None and block_g is not None,
+                  b=eta.shape[0], g=h0.shape[0])
     if block_b is None or block_g is None:
-        cfg = autotune.lookup("survival_curves", b=eta.shape[0],
-                              g=h0.shape[0])
         block_b = cfg["block_b"] if block_b is None else block_b
         block_g = cfg["block_g"] if block_g is None else block_g
     return _survival_curves_kernel(eta, h0, block_b=block_b,
@@ -97,7 +124,8 @@ def lipschitz_constants(x: jax.Array, delta: jax.Array,
     """(L2, L3) Theorem-3.4 constants — tie-free fast path."""
     from .lipschitz import lipschitz as _lips_kernel
 
+    cfg = _blocks("lipschitz", block_n is not None,
+                  n=x.shape[0], m=x.shape[1])
     if block_n is None:
-        block_n = autotune.lookup("lipschitz", n=x.shape[0],
-                                  m=x.shape[1])["block_n"]
+        block_n = cfg["block_n"]
     return _lips_kernel(x, delta, block_n=block_n)

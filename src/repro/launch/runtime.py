@@ -91,11 +91,19 @@ def describe() -> Dict[str, object]:
 
 
 def log(prefix: str = "[runtime]") -> Dict[str, object]:
-    """Print and return the effective environment, one line per field."""
+    """Print and return the effective environment, one line per field.
+
+    Also emits a ``runtime.env`` snapshot event to the JSONL sink (when
+    ``$REPRO_EVENTS_FILE`` is on), so every recorded trace/benchmark
+    stream opens with the runtime configuration that produced it.
+    """
     d = describe()
     for k, v in d.items():
         print(f"{prefix} {k}={v}", flush=True)
     if not tcmalloc_active() and find_tcmalloc():
         print(f"{prefix} note: tcmalloc present but not preloaded — "
               "launch via scripts/launch.sh to enable it", flush=True)
+    from ..obs import events as obs_events
+
+    obs_events.emit("runtime.env", **{k: v for k, v in d.items()})
     return d

@@ -1,0 +1,53 @@
+"""Optional ``jax.profiler`` capture, gated by ``$REPRO_PROFILE_DIR``.
+
+    with profile.maybe_profile("autotune/cox_batch"):
+        ... timed kernel calls ...
+
+When the env var is unset this is a no-op (one dict lookup). When set,
+the block runs under ``jax.profiler.trace`` writing a TensorBoard-
+loadable trace into ``$REPRO_PROFILE_DIR/<name>``; a ``profile.capture``
+event records where it landed. Profiler failures (unsupported backend,
+concurrent capture) degrade to a warning event, never an exception — a
+profiling flag must not take down a tuning run.
+"""
+from __future__ import annotations
+
+import contextlib
+import os
+import re
+
+from . import events
+
+ENV_VAR = "REPRO_PROFILE_DIR"
+
+
+def profile_dir():
+    return os.environ.get(ENV_VAR) or None
+
+
+def _safe(name: str) -> str:
+    return re.sub(r"[^A-Za-z0-9_.\-/]", "_", name).strip("/")
+
+
+@contextlib.contextmanager
+def maybe_profile(name: str):
+    """Profile the block iff ``$REPRO_PROFILE_DIR`` is set."""
+    base = profile_dir()
+    if not base:
+        yield
+        return
+    target = os.path.join(base, _safe(name))
+    try:
+        import jax
+
+        os.makedirs(target, exist_ok=True)
+        ctx = jax.profiler.trace(target)
+    except Exception as e:   # profiler unavailable: degrade, don't die
+        events.emit("profile.error", name=name, error=repr(e))
+        yield
+        return
+    try:
+        with ctx:
+            yield
+    finally:
+        events.emit("profile.capture", name=name, dir=target)

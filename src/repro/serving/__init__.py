@@ -21,7 +21,9 @@ Module map
 ``service.py``
     ``RiskService`` — continuous micro-batching request queue mirroring
     launch/serve.py's loop: submit -> queue -> micro-batch -> jit score ->
-    respond, with req/s and p50/p99 latency instrumentation.
+    respond, with req/s and p50/p99 latency instrumentation, per-batch
+    tracing spans + always-on metrics (``repro.obs``), a bounded-queue
+    shedding mode (``QueueFull``), and explicit ``ScoreTimeout`` waits.
 
 End-to-end wiring: ``examples/serve_risk_api.py`` (beam-search model ->
 artifact -> service); throughput/latency numbers:
@@ -30,4 +32,5 @@ kernels: ``analysis/roofline.py`` (SERVING_KERNELS).
 """
 from .artifacts import SurvivalModel, fit_survival_model  # noqa: F401
 from .engine import ScoringEngine  # noqa: F401
-from .service import RiskService, ScoreRequest, ScoreResponse  # noqa: F401
+from .service import (QueueFull, RiskService, ScoreRequest,  # noqa: F401
+                      ScoreResponse, ScoreTimeout)

@@ -30,9 +30,23 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops
+from ..obs import events as obs_events
+from ..obs import metrics as obs_metrics
+from ..obs import trace
 from .artifacts import SurvivalModel
 
 _ETA_CLIP = 30.0
+
+# shared across engines: compile blowups (a bucketing regression) show up
+# as a climbing counter, bucket skew as a lopsided histogram
+_M_COMPILES = obs_metrics.REGISTRY.counter(
+    "engine_jit_compiles_total", "fresh jit-cache compilations",
+    ("kind",))
+_M_CALLS = obs_metrics.REGISTRY.counter(
+    "engine_calls_total", "scoring calls", ("kind",))
+_M_BUCKET = obs_metrics.REGISTRY.histogram(
+    "engine_bucket_size", "padded power-of-two batch buckets hit",
+    buckets=obs_metrics.POW2_BUCKETS)
 
 
 def _next_pow2(b: int) -> int:
@@ -92,6 +106,10 @@ class ScoringEngine:
         fn = self._cache.get(key)
         if fn is None:
             self.compiles += 1
+            _M_COMPILES.inc(kind=kind)
+            obs_events.emit("engine.compile", query=kind, bucket=bucket,
+                            feature_dim=self.feature_dim,
+                            cache_entries=len(self._cache))
             fn = self._build(kind)
             self._cache[key] = fn
         return fn
@@ -137,23 +155,27 @@ class ScoringEngine:
         return jax.jit(fn)
 
     def _run(self, kind: str, x, strata):
-        xh = self._gather(x)
-        xp, b, bucket = self._pad(xh)
-        sp = np.zeros(bucket, np.int32)
-        if strata is not None:
-            s = np.asarray(strata, np.int32)
-            if s.size and (s.min() < 0 or s.max() >= self.model.n_strata):
-                # the jit'd gather would silently clamp out-of-range rows
-                raise ValueError(
-                    f"stratum indices must be in [0, {self.model.n_strata})"
-                    f", got range [{s.min()}, {s.max()}]")
-            sp[:b] = s
-        self.calls += 1
-        out = self._fn(kind, bucket)(jnp.asarray(xp), self._beta,
-                                     jnp.asarray(sp))
-        if isinstance(out, tuple):
-            return tuple(np.asarray(o)[:b] for o in out)
-        return np.asarray(out)[:b]
+        with trace.span("engine.score", kind=kind) as sp_span:
+            xh = self._gather(x)
+            xp, b, bucket = self._pad(xh)
+            sp = np.zeros(bucket, np.int32)
+            if strata is not None:
+                s = np.asarray(strata, np.int32)
+                if s.size and (s.min() < 0 or s.max() >= self.model.n_strata):
+                    # the jit'd gather would silently clamp out-of-range rows
+                    raise ValueError(
+                        f"stratum indices must be in [0, {self.model.n_strata})"
+                        f", got range [{s.min()}, {s.max()}]")
+                sp[:b] = s
+            self.calls += 1
+            _M_CALLS.inc(kind=kind)
+            _M_BUCKET.observe(bucket)
+            sp_span.set(b=b, bucket=bucket)
+            out = self._fn(kind, bucket)(jnp.asarray(xp), self._beta,
+                                         jnp.asarray(sp))
+            if isinstance(out, tuple):
+                return tuple(np.asarray(o)[:b] for o in out)
+            return np.asarray(out)[:b]
 
     # -- public API --------------------------------------------------------
 

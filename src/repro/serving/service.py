@@ -8,9 +8,20 @@ the same loop on a background thread (the "continuous" mode: whatever has
 queued since the last step forms the next micro-batch — exactly the
 dynamic-batch policy of the LM serving loop, minus the decode recurrence).
 
-Instrumentation: per-request latency (submit -> response), micro-batch
-size histogram, throughput, and the engine's jit-cache counters, so
-bucketing regressions show up as compile-count blowups in stats().
+Telemetry (``repro.obs``): every batch is one trace — a ``service.step``
+root span with ``service.batch_form`` / ``service.dispatch`` /
+``service.respond`` children plus one retroactive ``service.request``
+span per request (queue wait + total latency), so the per-stage
+latency-breakdown table in ``analysis/report.py`` attributes p99 to
+queueing vs batching vs jit dispatch. Always-on metrics: queue-depth
+gauge, batch-size and latency histograms, served / shed / timeout
+counters. Spans cost one ``None`` check when tracing is off.
+
+Overload behavior: ``max_queue`` bounds the queue — ``submit()`` beyond
+it sheds the request (raises ``QueueFull``, counts it in
+``service_rejected_total``). ``wait()`` past its deadline raises
+``ScoreTimeout`` carrying the request id and counts it in
+``service_timeouts_total``.
 """
 from __future__ import annotations
 
@@ -19,11 +30,30 @@ import dataclasses
 import queue
 import threading
 import time
-from typing import Deque, Dict, Optional
+from typing import Deque, Dict, List, Optional
 
 import numpy as np
 
+from ..obs import metrics as obs_metrics
+from ..obs import trace
 from .engine import ScoringEngine
+
+
+class ScoreTimeout(TimeoutError):
+    """``wait()`` deadline passed before the request was scored."""
+
+    def __init__(self, rid: int, timeout: float):
+        super().__init__(f"request {rid} not scored within {timeout}s")
+        self.rid = rid
+        self.timeout = timeout
+
+
+class QueueFull(RuntimeError):
+    """``submit()`` shed the request: the bounded queue is at capacity."""
+
+    def __init__(self, max_queue: int):
+        super().__init__(f"request shed: queue at capacity ({max_queue})")
+        self.max_queue = max_queue
 
 
 @dataclasses.dataclass
@@ -41,17 +71,22 @@ class ScoreResponse:
     median: float
     curve: Optional[np.ndarray]
     latency_s: float
+    trace_id: Optional[str] = None       # the batch's trace, when tracing
 
 
 class RiskService:
     """Queue + micro-batch drain loop with latency instrumentation."""
 
     def __init__(self, engine: ScoringEngine, *, max_batch: int = 64,
-                 return_curves: bool = False, stats_window: int = 65536):
+                 return_curves: bool = False, stats_window: int = 65536,
+                 max_queue: Optional[int] = None,
+                 registry: Optional[obs_metrics.Registry] = None):
         self.engine = engine
         self.max_batch = max_batch
         self.return_curves = return_curves
-        self._q: "queue.Queue[ScoreRequest]" = queue.Queue()
+        self.max_queue = max_queue
+        self._q: "queue.Queue[ScoreRequest]" = queue.Queue(
+            maxsize=max_queue or 0)
         self._results: Dict[int, ScoreResponse] = {}
         self._lock = threading.Lock()
         self._rid = 0
@@ -62,10 +97,31 @@ class RiskService:
         self._latencies: Deque[float] = collections.deque(
             maxlen=stats_window)
         self._n_served = 0
+        self._n_rejected = 0
+        self._n_timeouts = 0
         self._t_first: Optional[float] = None
         self._t_last: Optional[float] = None
         self._thread: Optional[threading.Thread] = None
         self._stop = threading.Event()
+        reg = registry if registry is not None else obs_metrics.REGISTRY
+        self._m_served = reg.counter(
+            "service_requests_total", "requests scored")
+        self._m_rejected = reg.counter(
+            "service_rejected_total", "requests shed at a full queue")
+        self._m_timeouts = reg.counter(
+            "service_timeouts_total", "wait() deadlines missed")
+        self._m_depth = reg.gauge(
+            "service_queue_depth", "requests waiting in the queue")
+        # callback gauge: depth is read at scrape/snapshot time, the
+        # submit/step hot paths never touch it
+        self._m_depth.set_fn(self._q.qsize)
+        self._m_batch = reg.histogram(
+            "service_batch_size", "micro-batch sizes",
+            buckets=obs_metrics.POW2_BUCKETS)
+        self._m_latency = reg.histogram(
+            "service_latency_seconds", "submit -> response latency")
+        self._m_queue_wait = reg.histogram(
+            "service_queue_wait_seconds", "submit -> batch-form wait")
 
     # -- request side ------------------------------------------------------
 
@@ -75,10 +131,17 @@ class RiskService:
             self._rid += 1
             if self._t_first is None:
                 self._t_first = time.perf_counter()
-        self._q.put(ScoreRequest(rid=rid,
-                                 features=np.asarray(features, np.float32),
-                                 stratum=stratum,
-                                 t_submit=time.perf_counter()))
+        req = ScoreRequest(rid=rid,
+                           features=np.asarray(features, np.float32),
+                           stratum=stratum,
+                           t_submit=time.perf_counter())
+        try:
+            self._q.put_nowait(req)
+        except queue.Full:
+            with self._lock:
+                self._n_rejected += 1
+            self._m_rejected.inc()
+            raise QueueFull(self.max_queue) from None
         return rid
 
     def result(self, rid: int) -> Optional[ScoreResponse]:
@@ -95,40 +158,65 @@ class RiskService:
             if out is not None:
                 return out
             time.sleep(1e-4)
-        raise TimeoutError(f"request {rid} not scored within {timeout}s")
+        with self._lock:
+            self._n_timeouts += 1
+        self._m_timeouts.inc()
+        raise ScoreTimeout(rid, timeout)
 
     # -- serving side ------------------------------------------------------
 
     def step(self) -> int:
         """Score one micro-batch (whatever is queued, capped at max_batch).
         Returns the number of requests served."""
-        reqs: List[ScoreRequest] = []
-        while len(reqs) < self.max_batch:
-            try:
-                reqs.append(self._q.get_nowait())
-            except queue.Empty:
-                break
-        if not reqs:
+        if self._q.empty():    # idle poll: no spans for empty steps
             return 0
-        x = np.stack([r.features for r in reqs])
-        strata = np.asarray([r.stratum for r in reqs], np.int32)
-        out = self.engine.score(x, strata, with_curves=self.return_curves)
-        risks, medians = out[0], out[1]
-        curves = out[2] if self.return_curves else None
-        t_done = time.perf_counter()
-        with self._lock:
-            self._batch_sizes.append(len(reqs))
-            self._n_served += len(reqs)
-            self._t_last = t_done
-            for i, r in enumerate(reqs):
-                lat = t_done - r.t_submit
-                self._latencies.append(lat)
-                self._results[r.rid] = ScoreResponse(
-                    rid=r.rid, risk=float(risks[i]),
-                    median=float(medians[i]),
-                    curve=None if curves is None else curves[i],
-                    latency_s=lat)
-        return len(reqs)
+        with trace.span("service.step") as step_span:
+            with trace.span("service.batch_form"):
+                reqs: List[ScoreRequest] = []
+                while len(reqs) < self.max_batch:
+                    try:
+                        reqs.append(self._q.get_nowait())
+                    except queue.Empty:
+                        break
+                if not reqs:
+                    return 0
+                t_formed = time.perf_counter()
+                x = np.stack([r.features for r in reqs])
+                strata = np.asarray([r.stratum for r in reqs], np.int32)
+            step_span.set(batch=len(reqs))
+            with trace.span("service.dispatch", batch=len(reqs)):
+                out = self.engine.score(x, strata,
+                                        with_curves=self.return_curves)
+                risks, medians = out[0], out[1]
+                curves = out[2] if self.return_curves else None
+            with trace.span("service.respond"):
+                t_done = time.perf_counter()
+                traced = trace.enabled()
+                with self._lock:
+                    self._batch_sizes.append(len(reqs))
+                    self._n_served += len(reqs)
+                    self._t_last = t_done
+                    for i, r in enumerate(reqs):
+                        lat = t_done - r.t_submit
+                        self._latencies.append(lat)
+                        self._results[r.rid] = ScoreResponse(
+                            rid=r.rid, risk=float(risks[i]),
+                            median=float(medians[i]),
+                            curve=None if curves is None else curves[i],
+                            latency_s=lat,
+                            trace_id=step_span.trace_id)
+                self._m_served.inc(len(reqs))
+                self._m_batch.observe(len(reqs))
+                subs = np.fromiter((r.t_submit for r in reqs),
+                                   dtype=float, count=len(reqs))
+                self._m_queue_wait.observe_many(t_formed - subs)
+                self._m_latency.observe_many(t_done - subs)
+                if traced:
+                    for r in reqs:
+                        trace.emit_span("service.request",
+                                        t_done - r.t_submit, rid=r.rid,
+                                        queue_wait_s=t_formed - r.t_submit)
+            return len(reqs)
 
     def drain(self) -> int:
         """Serve until the queue is empty; returns requests served."""
@@ -164,20 +252,29 @@ class RiskService:
 
     def stats(self) -> dict:
         """Served-request counters, throughput, and windowed latency
-        percentiles (over the last ``stats_window`` requests)."""
+        percentiles (over the last ``stats_window`` requests).
+
+        Every key is always present — before the first request completes
+        the percentiles are 0.0 and the throughput NaN — so dashboards
+        and tests never key-error on a fresh or idle service."""
         with self._lock:
             lats = np.asarray(self._latencies)
             n = self._n_served
+            rejected = self._n_rejected
+            timeouts = self._n_timeouts
             wall = ((self._t_last - self._t_first)
                     if (self._t_first is not None
                         and self._t_last is not None) else 0.0)
             sizes = list(self._batch_sizes)
-        out = {"n_requests": n, "wall_s": wall,
-               "reqs_per_s": (n / wall) if wall > 0 else float("nan"),
-               "n_batches": len(sizes),
-               "mean_batch": float(np.mean(sizes)) if sizes else 0.0,
-               "engine": self.engine.cache_info()}
-        if len(lats):
-            out["latency_p50_ms"] = float(np.percentile(lats, 50) * 1e3)
-            out["latency_p99_ms"] = float(np.percentile(lats, 99) * 1e3)
-        return out
+        return {"n_requests": n, "wall_s": wall,
+                "reqs_per_s": (n / wall) if wall > 0 else float("nan"),
+                "n_batches": len(sizes),
+                "mean_batch": float(np.mean(sizes)) if sizes else 0.0,
+                "queue_depth": self._q.qsize(),
+                "rejected_count": rejected,
+                "timeout_count": timeouts,
+                "latency_p50_ms": (float(np.percentile(lats, 50) * 1e3)
+                                   if len(lats) else 0.0),
+                "latency_p99_ms": (float(np.percentile(lats, 99) * 1e3)
+                                   if len(lats) else 0.0),
+                "engine": self.engine.cache_info()}

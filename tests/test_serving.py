@@ -1,13 +1,17 @@
 """Serving subsystem: Breslow artifact parity with the numpy evaluation
 path, save/load round trips, sparse fast path, the fused curve kernel, and
-the continuous-batching service."""
+the continuous-batching service (including overload shedding, wait
+deadlines, and concurrent submit/step/stats)."""
+import threading
+
 import numpy as np
 import pytest
 
 from repro.data.synthetic import make_tied_survival
 from repro.kernels import ops, ref
 from repro.kernels.survival_curves import survival_curves
-from repro.serving import (RiskService, ScoringEngine, SurvivalModel,
+from repro.serving import (QueueFull, RiskService, ScoreTimeout,
+                           ScoringEngine, SurvivalModel,
                            fit_survival_model)
 from repro.survival import metrics
 
@@ -301,6 +305,110 @@ def test_artifact_save_overwrite_never_leaves_hole(tmp_path):
     np.testing.assert_array_equal(loaded1.base_cumhaz, loaded2.base_cumhaz)
     assert not (tmp_path / "m.old").exists()
     assert not (tmp_path / "m.tmp").exists()
+
+
+def test_stats_keys_present_on_fresh_service():
+    """Dashboards must not key-error before the first request: every
+    stats() key exists (percentiles 0.0, throughput NaN) on an idle
+    service."""
+    x, t, delta, beta = _problem(n=80, p=6)
+    svc = RiskService(ScoringEngine(fit_survival_model(x, t, delta, beta)))
+    st = svc.stats()
+    for key in ("n_requests", "wall_s", "reqs_per_s", "n_batches",
+                "mean_batch", "queue_depth", "rejected_count",
+                "timeout_count", "latency_p50_ms", "latency_p99_ms",
+                "engine"):
+        assert key in st, key
+    assert st["n_requests"] == 0
+    assert st["queue_depth"] == 0
+    assert st["rejected_count"] == 0
+    assert st["latency_p50_ms"] == 0.0
+    assert st["latency_p99_ms"] == 0.0
+    assert np.isnan(st["reqs_per_s"])
+
+
+def test_wait_timeout_raises_score_timeout():
+    x, t, delta, beta = _problem(n=80, p=6)
+    svc = RiskService(ScoringEngine(fit_survival_model(x, t, delta, beta)))
+    rid = svc.submit(x[0])          # never stepped: no serving thread
+    with pytest.raises(ScoreTimeout) as ei:
+        svc.wait(rid, timeout=0.05)
+    assert ei.value.rid == rid
+    assert str(rid) in str(ei.value)
+    assert svc.stats()["timeout_count"] == 1
+    # the request is still queued and scoreable afterwards
+    svc.drain()
+    assert svc.result(rid) is not None
+
+
+def test_bounded_queue_sheds_with_queue_full():
+    x, t, delta, beta = _problem(n=80, p=6)
+    svc = RiskService(ScoringEngine(fit_survival_model(x, t, delta, beta)),
+                      max_queue=2)
+    svc.submit(x[0])
+    svc.submit(x[1])
+    with pytest.raises(QueueFull):
+        svc.submit(x[2])
+    st = svc.stats()
+    assert st["rejected_count"] == 1
+    assert st["queue_depth"] == 2
+    assert svc.drain() == 2         # shed request never enters a batch
+
+
+def test_concurrent_submit_step_stats():
+    """Producers, the serving thread, and a stats poller all hammering the
+    service concurrently: every request is scored exactly once and the
+    counters reconcile."""
+    x, t, delta, beta = _problem(n=200, p=8)
+    svc = RiskService(ScoringEngine(fit_survival_model(x, t, delta, beta)),
+                      max_batch=16)
+    svc.start()
+    n_threads, per_thread = 4, 25
+    rids = [[] for _ in range(n_threads)]
+    stats_seen = []
+    stop_polling = threading.Event()
+
+    def produce(slot):
+        rng = np.random.default_rng(slot)
+        for _ in range(per_thread):
+            rids[slot].append(
+                svc.submit(rng.standard_normal(8).astype(np.float32)))
+
+    def poll():
+        while not stop_polling.is_set():
+            stats_seen.append(svc.stats())
+
+    threads = [threading.Thread(target=produce, args=(s,))
+               for s in range(n_threads)]
+    poller = threading.Thread(target=poll)
+    poller.start()
+    try:
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+        outs = [svc.wait(rid, timeout=60.0)
+                for slot in rids for rid in slot]
+    finally:
+        stop_polling.set()
+        poller.join()
+        svc.stop()
+    total = n_threads * per_thread
+    assert len(outs) == total
+    assert all(np.isfinite(o.risk) for o in outs)
+    # rids are unique and each response matches its request id
+    flat = [rid for slot in rids for rid in slot]
+    assert len(set(flat)) == total
+    assert [o.rid for o in outs] == flat
+    st = svc.stats()
+    assert st["n_requests"] == total
+    assert st["timeout_count"] == 0 and st["rejected_count"] == 0
+    assert st["queue_depth"] == 0
+    # stats() stayed coherent mid-flight: monotone n_requests, all keys
+    assert stats_seen, "poller never ran"
+    served_seq = [s["n_requests"] for s in stats_seen]
+    assert served_seq == sorted(served_seq)
+    assert all("latency_p99_ms" in s for s in stats_seen)
 
 
 # ---------------------------------------------------------------------------
