@@ -1,0 +1,225 @@
+"""Scale benchmark: streaming fits and sharded scoring vs n.
+
+Two sections, both emitted through run.py's schema-validated record path:
+
+* ``scale/fit_full|fit_stream/n=…`` — training throughput (rows/sec, one
+  outer iteration's worth of work) and peak *host* memory (tracemalloc,
+  MB) for the monolithic ``fit_cd`` vs the chunked ``fit_stream``. The
+  streaming rows generate chunks on the fly from a seeded factory — the
+  full (n, p) matrix never exists host-side, so peak memory stays bounded
+  by the chunk size while full-batch peaks at the materialized matrix.
+  The largest n runs stream-only (the point of the streaming path).
+* ``scale/scoring/shard=…`` — 1-vs-2-shard ``ScoringEngine.score``
+  rows/sec at serving bucket sizes, run in a subprocess with two forced
+  host devices (the harness keeps the parent at 1).
+  ``scale/scoring/shard_speedup/...`` carries the headline ratio
+  (acceptance: >= 1.5x at the largest bucket).
+
+Rows are (name, us_per_call, derived[, value]) as in bench_serving.py.
+"""
+import json
+import os
+import subprocess
+import sys
+import time
+import tracemalloc
+
+import numpy as np
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+FIT_P = 32
+STREAM_CHUNK = 32768
+SCORING_BUCKETS = (16384, 65536)
+SCORING_GRID = 128
+
+
+class SyntheticChunkSource:
+    """Chunk factory: tie-free, globally time-ordered synthetic survival
+    chunks generated on demand (seeded per chunk, so random access and
+    repeated passes see identical data). Never materializes (n, p)."""
+
+    def __init__(self, n: int, p: int, chunk_rows: int, seed: int = 0):
+        self.n, self.p = int(n), int(p)
+        self.chunk_rows = int(chunk_rows)
+        self.seed = int(seed)
+        rng = np.random.default_rng(seed)
+        k = max(p // 8, 1)
+        self._beta_star = np.zeros(p, np.float32)
+        self._beta_star[rng.choice(p, k, replace=False)] = \
+            rng.choice([-1.0, 1.0], k).astype(np.float32)
+
+    def __len__(self) -> int:
+        return -(-self.n // self.chunk_rows)
+
+    def __getitem__(self, i: int):
+        from repro.core import streaming
+
+        if not 0 <= i < len(self):
+            raise IndexError(i)
+        lo = i * self.chunk_rows
+        m = min(self.chunk_rows, self.n - lo)
+        rng = np.random.default_rng((self.seed + 1, i))
+        x = (rng.standard_normal((m, self.p)) * 0.5).astype(np.float32)
+        # rows are implicitly ordered by global index == ascending time
+        # (tie-free); event probability tied to the true linear predictor
+        eta = x @ self._beta_star
+        pr = 1.0 / (1.0 + np.exp(-eta))
+        delta = (rng.uniform(size=m) < 0.3 + 0.4 * pr).astype(np.float32)
+        return streaming.Chunk(x=x, delta=delta)
+
+
+def _materialized(source: SyntheticChunkSource):
+    """Concatenate a chunk source into a monolithic CoxData (full-batch
+    baseline only — this is exactly the allocation streaming avoids)."""
+    import jax.numpy as jnp
+
+    from repro.core import cox
+
+    xs, ds = [], []
+    for i in range(len(source)):
+        c = source[i]
+        xs.append(np.asarray(c.x))
+        ds.append(np.asarray(c.delta))
+    x = np.concatenate(xs)
+    d = np.concatenate(ds)
+    idx = jnp.arange(x.shape[0], dtype=jnp.int32)
+    return cox.CoxData(x=jnp.asarray(x), delta=jnp.asarray(d),
+                       risk_start=idx, tie_end=idx)
+
+
+def _fit_rows(n_list, stream_only, iters, lam2=0.01):
+    import jax
+
+    from repro.core import solvers
+
+    rows = []
+    for n in n_list:
+        src = SyntheticChunkSource(n, FIT_P, STREAM_CHUNK, seed=n)
+        chunk_mb = STREAM_CHUNK * FIT_P * 4 / 1e6
+
+        if n not in stream_only:
+            tracemalloc.start()
+            t0 = time.perf_counter()
+            data = _materialized(src)
+            res = solvers.fit_cd(data, lam2=lam2, n_iters=iters)
+            jax.block_until_ready(res.beta)
+            dt = time.perf_counter() - t0
+            _, peak = tracemalloc.get_traced_memory()
+            tracemalloc.stop()
+            rps = n * iters / dt
+            rows.append((f"scale/fit_full/n={n}", dt * 1e6,
+                         f"rows_per_s={rps:.0f} peak_mb={peak / 1e6:.1f} "
+                         f"matrix_mb={n * FIT_P * 4 / 1e6:.1f}", rps))
+            del data, res
+
+        tracemalloc.start()
+        t0 = time.perf_counter()
+        res = solvers.fit_stream(src, lam2=lam2, n_epochs=iters)
+        jax.block_until_ready(res.beta)
+        dt = time.perf_counter() - t0
+        _, peak = tracemalloc.get_traced_memory()
+        tracemalloc.stop()
+        rps = n * iters / dt
+        rows.append((f"scale/fit_stream/n={n}", dt * 1e6,
+                     f"rows_per_s={rps:.0f} peak_mb={peak / 1e6:.1f} "
+                     f"chunk_mb={chunk_mb:.1f} chunks={len(src)}", rps))
+    return rows
+
+
+# -- sharded scoring (subprocess: parent process keeps 1 device) ------------
+
+_SCORING_SCRIPT = r"""
+import json, os, sys, time
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import numpy as np
+from repro.data.synthetic import SyntheticSpec, make_correlated_survival
+from repro.serving import ScoringEngine, fit_survival_model
+
+buckets = json.loads(sys.argv[1])
+grid = int(sys.argv[2])
+reps = int(sys.argv[3])
+p = 32
+
+x, t, delta, beta_star = make_correlated_survival(
+    SyntheticSpec(n=2000, p=p, k=4, rho=0.5, seed=0, censor_scale=3.0))
+model = fit_survival_model(x, t, delta, beta_star, grid_size=grid)
+rng = np.random.default_rng(1)
+out = {}
+ROUNDS = 3
+for b in buckets:
+    feats = rng.standard_normal((b, p)).astype(np.float32)
+    # use_kernel=False: the jnp path is the production path on CPU
+    # (Pallas only interprets here)
+    engines = {s: ScoringEngine(model, use_sparse=False, use_kernel=False,
+                                shard=None if s == 1 else s)
+               for s in (1, 2)}
+    for eng in engines.values():
+        eng.score(feats); eng.score(feats)     # warm the bucket jit
+    # sustained mean over `reps` calls is the serving throughput metric;
+    # alternating rounds + min-of-round-means damp host noise on a
+    # shared box (both arms sample the same interference)
+    best = {1: float("inf"), 2: float("inf")}
+    for _ in range(ROUNDS):
+        for shard, eng in engines.items():
+            t0 = time.perf_counter()
+            for _ in range(reps):
+                r, m = eng.score(feats)
+            best[shard] = min(best[shard],
+                              (time.perf_counter() - t0) / reps)
+    for shard in (1, 2):
+        out[f"{shard}/{b}"] = best[shard]
+    # parity while we're here: sharded must equal unsharded bit-for-bit
+    e1 = ScoringEngine(model, use_sparse=False)
+    e2 = ScoringEngine(model, use_sparse=False, shard=2)
+    q = feats[: min(1024, b)]
+    r1, m1 = e1.score(q); r2, m2 = e2.score(q)
+    assert np.array_equal(r1, r2) and np.array_equal(m1, m2)
+print("RESULT " + json.dumps(out))
+"""
+
+
+def _scoring_rows(buckets, reps):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (os.path.join(ROOT, "src")
+                         + os.pathsep + env.get("PYTHONPATH", ""))
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, "-c", _SCORING_SCRIPT, json.dumps(list(buckets)),
+         str(SCORING_GRID), str(reps)],
+        env=env, capture_output=True, text=True, timeout=1800)
+    line = next((ln for ln in proc.stdout.splitlines()
+                 if ln.startswith("RESULT ")), None)
+    if line is None:
+        raise RuntimeError("scoring subprocess failed:\n"
+                           + proc.stdout + "\n---\n" + proc.stderr)
+    timings = json.loads(line[len("RESULT "):])
+    rows = []
+    for b in buckets:
+        for shard in (1, 2):
+            dt = timings[f"{shard}/{b}"]
+            rps = b / dt
+            rows.append((f"scale/scoring/shard={shard}/b={b}", dt * 1e6,
+                         f"rows_per_s={rps:.0f} g={SCORING_GRID}", rps))
+        ratio = timings[f"1/{b}"] / timings[f"2/{b}"]
+        rows.append((f"scale/scoring/shard_speedup/b={b}", 0.0,
+                     f"x{ratio:.2f} (accept >= 1.5x at largest bucket)",
+                     ratio))
+    return rows
+
+
+def run(smoke: bool = False):
+    if smoke:
+        rows = _fit_rows(n_list=(2000,), stream_only=(), iters=2)
+        rows += _scoring_rows(buckets=(4096,), reps=3)
+        return rows
+    rows = _fit_rows(n_list=(10_000, 100_000, 200_000, 1_000_000),
+                     stream_only=(1_000_000,), iters=2)
+    rows += _scoring_rows(buckets=SCORING_BUCKETS, reps=12)
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in run(smoke="--smoke" in sys.argv):
+        print(f"{row[0]},{row[1]:.1f},{row[2]}")

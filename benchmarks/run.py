@@ -22,10 +22,12 @@ histograms alongside timings.
 path, a tiny autotune sweep into a throwaway cache, the serving benchmark
 at tiny shapes with schema validation of its records, a regression
 gate on ``serving/batch_speedup`` against the committed ``BENCH_*.json``
-baseline when one exists, and a telemetry gate — the embedded metrics
+baseline when one exists, a telemetry gate — the embedded metrics
 snapshot must validate against its schema and the instrumented smoke fit
-must record **zero monotonicity violations** — all in well under a
-minute.
+must record **zero monotonicity violations** — plus the PR-8 scale gates:
+a tiny ``fit_stream`` (zero violations on the live counter), a 2-shard
+host-mesh scoring parity check (subprocess, bit-identical to unsharded),
+and schema validation of the committed ``BENCH_8.json`` when present.
 
 Runnable both as ``python -m benchmarks.run`` (with ``PYTHONPATH=src``)
 and directly as ``python benchmarks/run.py``.
@@ -40,7 +42,7 @@ import sys
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 BENCH_KEYS = ("efficiency", "selection_f1", "selection_real", "kernels",
-              "serving")
+              "serving", "scale")
 
 # the bench-record schema BENCH_*.json files are validated against
 RECORD_REQUIRED = {
@@ -82,10 +84,11 @@ def _setup_runtime(verbose: bool = False):
 
 def _import_benches():
     try:
-        from . import (bench_efficiency, bench_kernels, bench_selection_f1,
-                       bench_selection_real, bench_serving)
+        from . import (bench_efficiency, bench_kernels, bench_scale,
+                       bench_selection_f1, bench_selection_real,
+                       bench_serving)
     except ImportError:
-        from benchmarks import (bench_efficiency, bench_kernels,
+        from benchmarks import (bench_efficiency, bench_kernels, bench_scale,
                                 bench_selection_f1, bench_selection_real,
                                 bench_serving)
     return {
@@ -94,6 +97,7 @@ def _import_benches():
         "selection_real": bench_selection_real.run,  # paper Figs. 3/4
         "kernels": bench_kernels.run,             # Cor. 3.3 machinery
         "serving": bench_serving.run,             # inference subsystem
+        "scale": bench_scale.run,                 # streaming + sharded n
     }
 
 
@@ -343,6 +347,63 @@ def _smoke() -> int:
               "surrogate descent guarantee is broken")
         return 1
     print(f"[smoke] telemetry ok ({tel_rec['derived']})")
+
+    # streaming-fit gate: a tiny fit_stream must descend monotonically
+    # (zero violations on the live counter) through the same telemetry
+    try:
+        from . import bench_scale
+    except ImportError:
+        from benchmarks import bench_scale
+    from repro.core import solvers
+    from repro.obs import TelemetryCallback
+    tel = TelemetryCallback("fit_stream_smoke")
+    src = bench_scale.SyntheticChunkSource(1500, 8, 512, seed=0)
+    res = solvers.fit_stream(src, lam2=0.05, n_epochs=3, telemetry=tel)
+    if tel.violations > 0 or tel.iterations < 1:
+        print(f"[smoke] FAILED: streaming fit recorded "
+              f"{tel.violations} violation(s) over {tel.iterations} "
+              "epoch(s)")
+        return 1
+    print(f"[smoke] streaming fit ok (epochs={tel.iterations} "
+          f"violations={tel.violations} "
+          f"objective={float(res.objective[-1]):.2f})")
+
+    # 2-shard host-mesh scoring check: the subprocess asserts sharded ==
+    # unsharded bit-for-bit before reporting timings
+    try:
+        rows = bench_scale._scoring_rows(buckets=(2048,), reps=2)
+    except RuntimeError as e:
+        print(f"[smoke] FAILED: sharded scoring check: {e}")
+        return 1
+    _print_rows(rows)
+    print("[smoke] 2-shard scoring parity ok")
+
+    # BENCH_8 gate: when the scale artifact is committed it must satisfy
+    # the record schema and carry the shard-speedup headline
+    b8 = os.path.join(ROOT, "BENCH_8.json")
+    if os.path.exists(b8):
+        try:
+            with open(b8) as f:
+                b8_records = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"[smoke] FAILED: BENCH_8.json unreadable: {e}")
+            return 1
+        errors = validate_records(b8_records)
+        if errors:
+            print("[smoke] FAILED: BENCH_8.json violates schema:")
+            for e in errors:
+                print(f"[smoke]   {e}")
+            return 1
+        speedups = [r.get("value") for r in b8_records
+                    if isinstance(r, dict) and "shard_speedup"
+                    in str(r.get("name", ""))]
+        if not speedups:
+            print("[smoke] FAILED: BENCH_8.json has no shard_speedup record")
+            return 1
+        print(f"[smoke] BENCH_8.json ok ({len(b8_records)} records, "
+              f"shard speedup x{max(speedups):.2f})")
+    else:
+        print("[smoke] no BENCH_8.json committed yet — scale gate skipped")
     print("[smoke] OK")
     return 0
 

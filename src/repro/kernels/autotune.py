@@ -33,7 +33,7 @@ from .cox_batch import cox_batch
 from .cox_coord import cox_coord
 from .lipschitz import lipschitz
 from .revcumsum import revcumsum
-from .survival_curves import survival_curves
+from .survival_curves import survival_curves, survival_curves_stratified
 
 CACHE_ENV = "REPRO_TUNE_CACHE"
 CACHE_VERSION = 1
@@ -46,6 +46,7 @@ DEFAULT_CONFIGS: Dict[str, Dict[str, int]] = {
     "cox_batch": {"block_n": 512, "block_p": 256},
     "lipschitz": {"block_n": 512},
     "survival_curves": {"block_b": 256, "block_g": 128},
+    "survival_curves_strat": {"block_g": 128},
 }
 
 # shape axes that key a bucket, in display order
@@ -55,6 +56,7 @@ SHAPE_AXES: Dict[str, Tuple[str, ...]] = {
     "cox_batch": ("n", "p"),
     "lipschitz": ("n", "m"),
     "survival_curves": ("b", "g"),
+    "survival_curves_strat": ("b", "g"),
 }
 
 # config key -> the shape axis it tiles (used to prune candidates that are
@@ -65,6 +67,7 @@ BLOCK_AXES: Dict[str, Dict[str, str]] = {
     "cox_batch": {"block_n": "n", "block_p": "p"},
     "lipschitz": {"block_n": "n"},
     "survival_curves": {"block_b": "b", "block_g": "g"},
+    "survival_curves_strat": {"block_g": "g"},
 }
 
 # candidate grids: small on purpose (autotuning cost is linear in their
@@ -87,6 +90,7 @@ CANDIDATES: Dict[str, List[Dict[str, int]]] = {
         {"block_b": 256, "block_g": 256},
         {"block_b": 1024, "block_g": 512},
     ],
+    "survival_curves_strat": [{"block_g": b} for b in (128, 256, 512)],
 }
 
 # shapes swept by ``benchmarks/run.py --autotune``: the bench_kernels
@@ -106,6 +110,7 @@ _KERNEL_FNS = {
     "cox_batch": cox_batch,
     "lipschitz": lipschitz,
     "survival_curves": survival_curves,
+    "survival_curves_strat": survival_curves_stratified,
 }
 
 
@@ -213,6 +218,13 @@ def _build_inputs(kernel: str, shape: Dict[str, int], seed: int = 0):
         b, g = shape["b"], shape["g"]
         return (jnp.asarray(rng.standard_normal(b) * 0.5, jnp.float32),
                 jnp.asarray(np.linspace(0.0, 2.0, g), jnp.float32))
+    if kernel == "survival_curves_strat":
+        b, g = shape["b"], shape["g"]
+        s = 8
+        h0 = np.cumsum(rng.uniform(0.0, 0.05, size=(s, g)), axis=1)
+        return (jnp.asarray(rng.standard_normal(b) * 0.5, jnp.float32),
+                jnp.asarray(h0, jnp.float32),
+                jnp.asarray(rng.integers(0, s, size=b), jnp.int32))
     raise KeyError(f"unknown kernel {kernel!r}")
 
 

@@ -33,6 +33,8 @@ from .cox_batch import cox_batch as _cox_batch_kernel
 from .cox_coord import cox_coord as _cox_coord_kernel
 from .revcumsum import revcumsum as _revcumsum_kernel
 from .survival_curves import survival_curves as _survival_curves_kernel
+from .survival_curves import (
+    survival_curves_stratified as _survival_curves_strat_kernel)
 
 _M_DISPATCH = obs_metrics.REGISTRY.counter(
     "kernel_dispatch_total", "Pallas kernel dispatches by block provenance",
@@ -117,6 +119,18 @@ def survival_curves(eta: jax.Array, h0: jax.Array,
         block_g = cfg["block_g"] if block_g is None else block_g
     return _survival_curves_kernel(eta, h0, block_b=block_b,
                                    block_g=block_g)
+
+
+def survival_curves_stratified(eta: jax.Array, h0: jax.Array,
+                               strata: jax.Array,
+                               block_g: Optional[int] = None) -> jax.Array:
+    """Per-request-baseline curves; the h0 row gather runs inside the
+    kernel via scalar prefetch (h0 is (s, g), strata (b,) int rows)."""
+    cfg = _blocks("survival_curves_strat", block_g is not None,
+                  b=eta.shape[0], g=h0.shape[1])
+    if block_g is None:
+        block_g = cfg["block_g"]
+    return _survival_curves_strat_kernel(eta, h0, strata, block_g=block_g)
 
 
 def lipschitz_constants(x: jax.Array, delta: jax.Array,

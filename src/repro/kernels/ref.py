@@ -50,6 +50,13 @@ def survival_curves_ref(eta: jax.Array, h0: jax.Array) -> jax.Array:
     return jnp.exp(-risk[:, None] * h0.astype(jnp.float32)[None, :])
 
 
+def survival_curves_stratified_ref(eta: jax.Array, h0: jax.Array,
+                                   strata: jax.Array) -> jax.Array:
+    """(b, g) S = exp(-H0[strata_b, g] * exp(eta_b)); h0 is (s, g)."""
+    risk = jnp.exp(jnp.clip(eta.astype(jnp.float32), -30.0, 30.0))
+    return jnp.exp(-h0.astype(jnp.float32)[strata] * risk[:, None])
+
+
 def lipschitz_ref(x: jax.Array, delta: jax.Array):
     """(L2, L3) Theorem-3.4 constants for a time-sorted tie-free panel."""
     import numpy as np

@@ -19,6 +19,7 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
 
 
 def _curves_kernel(eta_ref, h0_ref, o_ref):
@@ -72,3 +73,63 @@ def survival_curves(eta: jax.Array, h0: jax.Array, block_b: int = 256,
         interpret = jax.default_backend() != "tpu"
     return _survival_curves_jit(eta, h0, block_b=block_b, block_g=block_g,
                                 interpret=interpret)
+
+
+# ---------------------------------------------------------------------------
+# Stratified variant: per-request baseline row, gathered via scalar prefetch
+# ---------------------------------------------------------------------------
+
+def _curves_strat_kernel(strata_ref, eta_ref, h0_ref, o_ref):
+    del strata_ref  # consumed by the index maps, not the body
+    eta = jnp.clip(eta_ref[...].astype(jnp.float32), -30.0, 30.0)  # (1, 1)
+    h0 = h0_ref[...].astype(jnp.float32)                           # (1, bg)
+    o_ref[...] = jnp.exp(-h0 * jnp.exp(eta)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_g", "interpret"))
+def _survival_curves_strat_jit(eta: jax.Array, h0: jax.Array,
+                               strata: jax.Array, block_g: int,
+                               interpret: bool) -> jax.Array:
+    b, g = eta.shape[0], h0.shape[1]
+    gb = pl.cdiv(g, block_g)
+    pad_g = gb * block_g - g
+    h0p = jnp.pad(h0, ((0, 0), (0, pad_g))) if pad_g else h0
+
+    out = pl.pallas_call(
+        _curves_strat_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=(b, gb),
+            in_specs=[
+                pl.BlockSpec((1, 1), lambda i, j, s: (i, 0)),
+                # the prefetched strata vector drives which baseline row
+                # is DMA'd for grid step i — the gather never hits VMEM
+                # as a full (b, g) materialized panel
+                pl.BlockSpec((1, block_g), lambda i, j, s: (s[i], j)),
+            ],
+            out_specs=pl.BlockSpec((1, block_g), lambda i, j, s: (i, j)),
+        ),
+        out_shape=jax.ShapeDtypeStruct((b, gb * block_g), jnp.float32),
+        interpret=interpret,
+    )(strata.astype(jnp.int32), eta.reshape(-1, 1), h0p)
+    return out[:, :g]
+
+
+def survival_curves_stratified(eta: jax.Array, h0: jax.Array,
+                               strata: jax.Array, block_g: int = 128,
+                               interpret: bool | None = None) -> jax.Array:
+    """(b, g) curves with a per-request baseline: S = exp(-H0[strata[i]] *
+    exp(eta[i])).
+
+    eta: (b,) linear predictors; h0: (s, g) per-stratum cumulative baseline
+    hazards; strata: (b,) int row indices into h0. The row gather folds
+    into the kernel's index map via scalar prefetch (the ROADMAP
+    carry-over): strata rides ahead of the grid in SMEM and selects the
+    h0 block DMA per request, so no (b, g) gathered copy of the baselines
+    is ever materialized. Grid is (b, g_blocks) — one request per row
+    step, eta clipped to +/-30 as in the unstratified kernel.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _survival_curves_strat_jit(eta, h0, strata, block_g=block_g,
+                                      interpret=interpret)

@@ -4,24 +4,63 @@ Defined as FUNCTIONS (not module constants) so importing this module never
 touches jax device state. The multi-pod mesh's leading ``pod`` axis is pure
 data parallelism: the only cross-pod traffic in a train step is the gradient
 all-reduce, which is what the (slower) DCN between pods can sustain.
+
+Also the jax-version compat seam for SPMD entry points: ``shard_map``
+moved from ``jax.experimental.shard_map`` into the top-level namespace and
+``axis_types`` only exists on newer ``jax.make_mesh`` — every sharded
+caller in the repo (core/distributed.py, serving/engine.py) goes through
+``shard_map_compat`` / ``_make_mesh`` instead of touching jax directly.
 """
 from __future__ import annotations
 
 import jax
 
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+else:  # jax < 0.5
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs, check_rep: bool = False):
+    """``shard_map`` across jax versions.
+
+    ``check_rep=False`` by default: the replication checker has no rule for
+    ``pallas_call`` (the serving curve kernel runs per-shard), and newer jax
+    renamed the knob — fall back to calling without it when unsupported.
+    """
+    try:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs, check_rep=check_rep)
+    except TypeError:
+        return _shard_map(f, mesh=mesh, in_specs=in_specs,
+                          out_specs=out_specs)
+
+
+def _make_mesh(shape, axes):
+    """jax.make_mesh with Auto axis_types when this jax version has them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        return jax.make_mesh(shape, axes,
+                             axis_types=(axis_type.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes)
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return _make_mesh(shape, axes)
 
 
 def make_host_mesh():
     """1-device mesh for CPU smoke paths (tests / examples)."""
-    return jax.make_mesh((1, 1), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    return _make_mesh((1, 1), ("data", "model"))
+
+
+def make_data_mesh(n_shards: int):
+    """1-D ``data`` mesh over ``n_shards`` local devices — the scoring
+    engine's batch-parallel mesh (requests shard over rows, model state is
+    replicated). ``n_shards`` must not exceed ``jax.local_device_count()``."""
+    return _make_mesh((int(n_shards),), ("data",))
 
 
 def dp_axes(mesh) -> tuple:

@@ -35,6 +35,30 @@ ENV_DEFAULTS: Dict[str, str] = {
 # user flags win); empty by default — the CPU container needs none
 XLA_FLAG_DEFAULTS: tuple = ()
 
+# large-n scale-out knobs (PR 8): how many data shards the scoring engine
+# spreads a batch over (0 = auto: one shard per local device), and the row
+# count of one streaming-fit chunk (the working-set bound of fit_stream)
+DATA_SHARDS_ENV = "REPRO_DATA_SHARDS"
+STREAM_CHUNK_ENV = "REPRO_STREAM_CHUNK"
+STREAM_CHUNK_DEFAULT = 65536
+
+
+def data_shards() -> int:
+    """``$REPRO_DATA_SHARDS`` as an int; 0 means auto (per-device)."""
+    try:
+        return max(int(os.environ.get(DATA_SHARDS_ENV, "0")), 0)
+    except ValueError:
+        return 0
+
+
+def stream_chunk() -> int:
+    """``$REPRO_STREAM_CHUNK`` rows per streaming-fit chunk (>= 1)."""
+    try:
+        return max(int(os.environ.get(STREAM_CHUNK_ENV,
+                                      str(STREAM_CHUNK_DEFAULT))), 1)
+    except ValueError:
+        return STREAM_CHUNK_DEFAULT
+
 
 def find_tcmalloc() -> Optional[str]:
     for p in TCMALLOC_PATHS:
@@ -87,6 +111,8 @@ def describe() -> Dict[str, object]:
         "xla_flags": os.environ.get("XLA_FLAGS", ""),
         "env": {k: os.environ.get(k, "") for k in ENV_DEFAULTS},
         "tune_cache": os.environ.get("REPRO_TUNE_CACHE", "(default)"),
+        "data_shards": data_shards() or "(auto)",
+        "stream_chunk": stream_chunk(),
     }
 
 

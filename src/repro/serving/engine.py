@@ -17,19 +17,31 @@ instead of one compilation per distinct batch size. Cache misses (i.e.
 fresh compilations) are counted for the instrumentation in service.py.
 
 The unstratified curve evaluation runs through the fused Pallas kernel
-(kernels/survival_curves.py); the stratified path gathers one baseline row
-per request first, which the kernel's rank-1 outer product cannot express,
-and stays in jnp.
+(kernels/survival_curves.py); the stratified path routes through the
+scalar-prefetch variant (per-request baseline row selected by the kernel's
+index map) on TPU and falls back to a jnp gather elsewhere, where Pallas
+only interprets.
+
+Data-parallel scoring: ``shard=k`` (or ``"auto"``) wraps every bucketed
+query body in ``shard_map`` over a 1-D ``data`` mesh from
+``launch/mesh.py`` — rows split over shards, model state replicated — and
+bucketing becomes per-shard (bucket = shards * next_pow2(ceil(b /
+shards))), so each shard sees a power-of-two block. ``shard=None`` (the
+default) is the legacy single-device path, bit-identical to previous
+behavior.
 """
 from __future__ import annotations
 
-from typing import Optional
+from typing import Optional, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax.sharding import PartitionSpec as P
 
 from ..kernels import ops
+from ..launch import mesh as launch_mesh
+from ..launch import runtime as launch_runtime
 from ..obs import events as obs_events
 from ..obs import metrics as obs_metrics
 from ..obs import trace
@@ -57,13 +69,33 @@ class ScoringEngine:
     """Batched scorer with a shape-bucketed jit cache."""
 
     def __init__(self, model: SurvivalModel, *, use_sparse: Optional[bool]
-                 = None, max_sparse_k: int = 64, use_kernel: bool = True):
+                 = None, max_sparse_k: int = 64, use_kernel: bool = True,
+                 shard: Union[int, str, None] = None,
+                 use_strat_kernel: Optional[bool] = None):
         self.model = model
         if use_sparse is None:
             use_sparse = (model.is_sparse
                           and model.k is not None and model.k <= max_sparse_k)
         self.use_sparse = bool(use_sparse and model.is_sparse)
         self.use_kernel = use_kernel
+        # stratified scalar-prefetch kernel: native on TPU; elsewhere the
+        # interpreted Pallas call loses to the jnp gather, so default off
+        if use_strat_kernel is None:
+            use_strat_kernel = jax.default_backend() == "tpu"
+        self.use_strat_kernel = bool(use_strat_kernel and use_kernel)
+        # shard=None -> legacy single-device path (bit-identical: no mesh,
+        # no shard_map in the trace); "auto" -> $REPRO_DATA_SHARDS or one
+        # shard per local device; int -> explicit, clamped to devices
+        if shard is None:
+            self.shard = 1
+        elif shard == "auto":
+            self.shard = (launch_runtime.data_shards()
+                          or jax.local_device_count())
+        else:
+            self.shard = int(shard)
+        self.shard = max(1, min(self.shard, jax.local_device_count()))
+        self._mesh = (launch_mesh.make_data_mesh(self.shard)
+                      if self.shard > 1 else None)
         self._support = (np.asarray(model.support)
                          if model.support is not None else None)
         beta = (model.beta_support if self.use_sparse else model.beta)
@@ -96,7 +128,12 @@ class ScoringEngine:
 
     def _pad(self, x: np.ndarray):
         b = x.shape[0]
-        bucket = _next_pow2(b)
+        if self.shard > 1:
+            # per-shard pow-2 bucketing: every shard sees a power-of-two
+            # block, the jit cache stays log-sized per shard count
+            bucket = self.shard * _next_pow2(-(-b // self.shard))
+        else:
+            bucket = _next_pow2(b)
         if bucket != b:
             x = np.pad(x, ((0, bucket - b), (0, 0)))
         return x, b, bucket
@@ -120,6 +157,7 @@ class ScoringEngine:
         h0 = self._h0
         grid = self._grid
         use_kernel = self.use_kernel and h0.shape[0] == 1
+        use_strat = self.use_strat_kernel and h0.shape[0] > 1
 
         def eta_of(xb, beta):
             return jnp.clip(xb @ beta, -_ETA_CLIP, _ETA_CLIP)
@@ -127,7 +165,15 @@ class ScoringEngine:
         def curves(xb, beta, strata):
             if use_kernel:
                 return ops.survival_curves(xb @ beta, h0[0])
-            hh = h0[strata]                      # (b, g) baseline gather
+            if use_strat:
+                # baseline-row gather folded into the kernel's index map
+                return ops.survival_curves_stratified(xb @ beta, h0, strata)
+            if h0.shape[0] == 1:
+                # single stratum: broadcast the one baseline row instead of
+                # materializing a (b, g) gather panel
+                hh = h0[0][None, :]
+            else:
+                hh = h0[strata]                  # (b, g) baseline gather
             return jnp.exp(-hh * jnp.exp(eta_of(xb, beta))[:, None])
 
         def median_of(s):
@@ -152,7 +198,28 @@ class ScoringEngine:
                 return out + ((s,) if kind == "score_curves" else ())
         else:
             raise ValueError(kind)
+        if self._mesh is not None:
+            fn = self._shard_wrap(fn, kind)
         return jax.jit(fn)
+
+    _OUT_SPECS = {
+        "risk": P("data"),
+        "curves": P("data", None),
+        "median": P("data"),
+        "score": (P("data"), P("data")),
+        "score_curves": (P("data"), P("data"), P("data", None)),
+    }
+
+    def _shard_wrap(self, fn, kind: str):
+        """Rows split over the ``data`` mesh, model state replicated.
+
+        The bucketed batch is divisible by the shard count by
+        construction (see ``_pad``), so every shard runs the same
+        pow-2-shaped pure body; outputs concatenate along rows."""
+        return launch_mesh.shard_map_compat(
+            fn, mesh=self._mesh,
+            in_specs=(P("data"), P(), P("data")),
+            out_specs=self._OUT_SPECS[kind])
 
     def _run(self, kind: str, x, strata):
         with trace.span("engine.score", kind=kind) as sp_span:
@@ -171,8 +238,13 @@ class ScoringEngine:
             _M_CALLS.inc(kind=kind)
             _M_BUCKET.observe(bucket)
             sp_span.set(b=b, bucket=bucket)
-            out = self._fn(kind, bucket)(jnp.asarray(xp), self._beta,
-                                         jnp.asarray(sp))
+            if self._mesh is not None:
+                # leave host arrays uncommitted: jnp.asarray would pin
+                # them to device 0 and force a reshard copy on every call
+                out = self._fn(kind, bucket)(xp, self._beta, sp)
+            else:
+                out = self._fn(kind, bucket)(jnp.asarray(xp), self._beta,
+                                             jnp.asarray(sp))
             if isinstance(out, tuple):
                 return tuple(np.asarray(o)[:b] for o in out)
             return np.asarray(out)[:b]
@@ -203,4 +275,4 @@ class ScoringEngine:
 
     def cache_info(self) -> dict:
         return {"entries": len(self._cache), "compiles": self.compiles,
-                "calls": self.calls}
+                "calls": self.calls, "shard": self.shard}

@@ -120,6 +120,7 @@ RAGGED_SHAPES = {
     "cox_batch": {"n": 261, "p": 19},
     "lipschitz": {"n": 300, "m": 7},
     "survival_curves": {"b": 77, "g": 33},
+    "survival_curves_strat": {"b": 77, "g": 33},
 }
 
 
@@ -132,6 +133,8 @@ def _reference(kernel, inputs):
         return ref.cox_batch_ref(*inputs)
     if kernel == "lipschitz":
         return ref.lipschitz_ref(*inputs)
+    if kernel == "survival_curves_strat":
+        return ref.survival_curves_stratified_ref(*inputs)
     return ref.survival_curves_ref(*inputs)
 
 

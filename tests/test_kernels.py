@@ -139,3 +139,48 @@ def test_lipschitz_kernel_matches_core(n, m):
     l2_k, l3_k = ops.lipschitz_constants(data.x, data.delta, block_n=256)
     np.testing.assert_allclose(l2_k, l2_ref, rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(l3_k, l3_ref, rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("b,s,g", [(1, 1, 16), (37, 5, 200), (64, 3, 128),
+                                   (130, 8, 257)])
+def test_survival_curves_stratified_matches_ref(b, s, g):
+    """Scalar-prefetch baseline-row gather == jnp oracle (interpret mode)."""
+    from repro.kernels.survival_curves import survival_curves_stratified
+
+    rng = np.random.default_rng(b + s + g)
+    eta = jnp.asarray(rng.standard_normal(b).astype(np.float32))
+    h0 = jnp.asarray(np.cumsum(rng.uniform(0, 0.05, (s, g)),
+                               axis=1).astype(np.float32))
+    strata = jnp.asarray(rng.integers(0, s, b).astype(np.int32))
+    out = survival_curves_stratified(eta, h0, strata, block_g=128,
+                                     interpret=True)
+    want = ref.survival_curves_stratified_ref(eta, h0, strata)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)
+
+
+def test_survival_curves_stratified_clips_extreme_eta():
+    from repro.kernels.survival_curves import survival_curves_stratified
+
+    eta = jnp.asarray([100.0, -100.0], jnp.float32)
+    h0 = jnp.asarray(np.linspace(0.0, 2.0, 32, dtype=np.float32))[None, :]
+    strata = jnp.zeros(2, jnp.int32)
+    out = np.asarray(survival_curves_stratified(eta, h0, strata,
+                                                interpret=True))
+    want = np.asarray(ref.survival_curves_stratified_ref(eta, h0, strata))
+    np.testing.assert_allclose(out, want, rtol=1e-6, atol=1e-6)
+    assert np.all(np.isfinite(out))
+
+
+def test_ops_stratified_dispatch_matches_ref():
+    """ops-level dispatch (autotune lookup path) agrees with the oracle."""
+    rng = np.random.default_rng(99)
+    b, s, g = 25, 4, 64
+    eta = jnp.asarray(rng.standard_normal(b).astype(np.float32))
+    h0 = jnp.asarray(np.cumsum(rng.uniform(0, 0.05, (s, g)),
+                               axis=1).astype(np.float32))
+    strata = jnp.asarray(rng.integers(0, s, b).astype(np.int32))
+    out = ops.survival_curves_stratified(eta, h0, strata)
+    want = ref.survival_curves_stratified_ref(eta, h0, strata)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               rtol=1e-6, atol=1e-6)

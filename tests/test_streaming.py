@@ -1,0 +1,220 @@
+"""Streaming Cox (core/streaming.py + solvers.fit_stream) and the
+shard-aware scoring engine."""
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import cox, solvers, streaming
+from repro.obs import TelemetryCallback
+from repro.serving.artifacts import fit_survival_model
+from repro.serving.engine import ScoringEngine
+
+
+def _make_data(n, p, seed=0):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, p)).astype(np.float32)
+    t = rng.exponential(size=n).astype(np.float32)  # continuous: tie-free
+    delta = (rng.uniform(size=n) < 0.7).astype(np.float32)
+    return cox.prepare(x, t, delta)
+
+
+# ---------------------------------------------------------------------------
+# chunked suffix-sum carry
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+@pytest.mark.parametrize("ndim", [1, 2])
+def test_chunked_revcumsum_random_boundaries(seed, ndim):
+    rng = np.random.default_rng(seed)
+    n = 777
+    shape = (n,) if ndim == 1 else (n, 5)
+    v = jnp.asarray(rng.standard_normal(shape).astype(np.float32))
+    k = rng.integers(1, 7)
+    bounds = sorted(rng.choice(np.arange(1, n), size=k, replace=False))
+    edges = [0] + list(bounds) + [n]
+    segs = [v[a:b] for a, b in zip(edges[:-1], edges[1:])]
+    outs = streaming.chunked_revcumsum(segs, use_kernel=False)
+    mono = jax.lax.cumsum(v, axis=0, reverse=True)
+    np.testing.assert_allclose(np.concatenate([np.asarray(o) for o in outs]),
+                               np.asarray(mono), rtol=1e-5, atol=1e-5)
+
+
+def test_chunked_revcumsum_kernel_path():
+    rng = np.random.default_rng(3)
+    v = jnp.asarray(rng.standard_normal(300).astype(np.float32))
+    segs = [v[:128], v[128:200], v[200:]]
+    outs = streaming.chunked_revcumsum(segs, use_kernel=True)
+    mono = jax.lax.cumsum(v, axis=0, reverse=True)
+    np.testing.assert_allclose(np.concatenate([np.asarray(o) for o in outs]),
+                               np.asarray(mono), rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# streaming statistics match the monolithic reference
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("chunk_rows", [97, 250, 1000])
+def test_streaming_grad_hess_matches_monolithic(chunk_rows):
+    data = _make_data(1000, 7, seed=4)
+    rng = np.random.default_rng(5)
+    beta = jnp.asarray(rng.standard_normal(7).astype(np.float32) * 0.3)
+    src = streaming.as_chunks(data, chunk_rows)
+    g, h, loss = streaming.streaming_grad_hess(src, beta)
+    eta = data.x @ beta
+    g_r, h_r = cox.grad_hess_all(data, eta)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_r),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(h), np.asarray(h_r),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(float(loss),
+                               float(cox.loss_from_eta(data, eta)),
+                               rtol=1e-5, atol=1e-3)
+    np.testing.assert_allclose(float(streaming.streaming_loss(src, beta)),
+                               float(cox.loss_from_eta(data, eta)),
+                               rtol=1e-5, atol=1e-3)
+
+
+def test_streaming_accepts_plain_chunk_list():
+    data = _make_data(300, 4, seed=6)
+    src = [streaming.Chunk(x=data.x[:100], delta=data.delta[:100]),
+           streaming.Chunk(x=data.x[100:], delta=data.delta[100:])]
+    beta = jnp.zeros(4, jnp.float32)
+    g, _, _ = streaming.streaming_grad_hess(src, beta)
+    g_r = cox.grad_all(data, data.x @ beta)
+    np.testing.assert_allclose(np.asarray(g), np.asarray(g_r),
+                               rtol=2e-4, atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# fit_stream
+# ---------------------------------------------------------------------------
+
+def test_fit_stream_single_chunk_matches_fit_cd():
+    data = _make_data(600, 6, seed=7)
+    res_cd = solvers.fit_cd(data, lam1=0.02, lam2=0.01, n_iters=200)
+    src = streaming.as_chunks(data, data.n)   # one full-size chunk
+    res_st = solvers.fit_stream(src, lam1=0.02, lam2=0.01,
+                                n_epochs=500, tol=1e-10)
+    f_cd = float(res_cd.objective[-1])
+    f_st = float(res_st.objective[-1])
+    assert abs(f_st - f_cd) <= 1e-4 * abs(f_cd), (f_st, f_cd)
+
+
+def test_fit_stream_multichunk_global_matches_fit_cd():
+    data = _make_data(600, 6, seed=8)
+    res_cd = solvers.fit_cd(data, lam1=0.02, lam2=0.01, n_iters=200)
+    src = streaming.as_chunks(data, 128)
+    res_st = solvers.fit_stream(src, lam1=0.02, lam2=0.01,
+                                n_epochs=500, tol=1e-10)
+    f_cd = float(res_cd.objective[-1])
+    f_st = float(res_st.objective[-1])
+    assert abs(f_st - f_cd) <= 1e-4 * abs(f_cd), (f_st, f_cd)
+
+
+def test_fit_stream_chunk_mode_descends_zero_violations():
+    data = _make_data(512, 5, seed=9)
+    src = streaming.as_chunks(data, 128)
+    tel = TelemetryCallback(solver="fit_stream_test")
+    res = solvers.fit_stream(src, lam2=0.05, n_epochs=25, mode="chunk",
+                             telemetry=tel)
+    obj = np.asarray(res.objective)
+    assert np.all(np.diff(obj) <= 1e-6), obj
+    assert tel.violations == 0
+    assert tel.iterations >= 1
+
+
+def test_fit_stream_rejects_unknown_mode():
+    data = _make_data(64, 3, seed=10)
+    with pytest.raises(ValueError):
+        solvers.fit_stream(streaming.as_chunks(data, 32), mode="nope")
+
+
+# ---------------------------------------------------------------------------
+# shard-aware scoring engine
+# ---------------------------------------------------------------------------
+
+def test_engine_shard_resolution_and_bucketing():
+    data_rng = np.random.default_rng(11)
+    x = data_rng.standard_normal((100, 4)).astype(np.float32)
+    t = data_rng.exponential(size=100).astype(np.float32)
+    d = (data_rng.uniform(size=100) < 0.6).astype(np.float32)
+    beta = data_rng.standard_normal(4).astype(np.float32) * 0.2
+    model = fit_survival_model(x, t, d, beta)
+
+    e = ScoringEngine(model)                       # legacy default
+    assert e.shard == 1 and e._mesh is None
+    assert e._pad(np.zeros((37, 4), np.float32))[2] == 64
+
+    # explicit shard counts clamp to the local device count (1 here)
+    e2 = ScoringEngine(model, shard=4)
+    assert e2.shard == jax.local_device_count()
+
+    os.environ["REPRO_DATA_SHARDS"] = "1"
+    try:
+        assert ScoringEngine(model, shard="auto").shard == 1
+    finally:
+        del os.environ["REPRO_DATA_SHARDS"]
+
+
+def test_engine_per_shard_bucketing_math():
+    # bucket = shards * next_pow2(ceil(b / shards)); verified without
+    # devices by faking the resolved shard count
+    rng = np.random.default_rng(12)
+    x = rng.standard_normal((50, 3)).astype(np.float32)
+    t = rng.exponential(size=50).astype(np.float32)
+    d = np.ones(50, np.float32)
+    model = fit_survival_model(x, t, d, np.zeros(3, np.float32))
+    e = ScoringEngine(model)
+    e.shard = 2
+    for b, want in [(1, 2), (2, 2), (3, 4), (37, 64), (64, 64), (65, 128)]:
+        assert e._pad(np.zeros((b, 3), np.float32))[2] == want, b
+
+
+SHARD_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+import numpy as np
+from repro.serving.artifacts import fit_survival_model
+from repro.serving.engine import ScoringEngine
+
+rng = np.random.default_rng(0)
+n, p = 300, 6
+x = rng.standard_normal((n, p)).astype(np.float32)
+t = rng.exponential(size=n).astype(np.float32)
+d = (rng.uniform(size=n) < 0.7).astype(np.float32)
+beta = rng.standard_normal(p).astype(np.float32) * 0.3
+strata = rng.integers(0, 3, n)
+model = fit_survival_model(x, t, d, beta, strata=strata)
+
+e1 = ScoringEngine(model, shard=None)
+e2 = ScoringEngine(model, shard=2)
+assert e2.shard == 2, e2.shard
+xq = rng.standard_normal((41, p)).astype(np.float32)
+sq = rng.integers(0, 3, 41)
+np.testing.assert_array_equal(e1.risk_scores(xq), e2.risk_scores(xq))
+np.testing.assert_array_equal(e1.survival_curves(xq, sq),
+                              e2.survival_curves(xq, sq))
+np.testing.assert_array_equal(e1.median_survival(xq, sq),
+                              e2.median_survival(xq, sq))
+r1, m1, c1 = e1.score(xq, sq, with_curves=True)
+r2, m2, c2 = e2.score(xq, sq, with_curves=True)
+np.testing.assert_array_equal(r1, r2)
+np.testing.assert_array_equal(c1, c2)
+print("ALL_OK")
+"""
+
+
+def test_sharded_scoring_parity_subprocess():
+    """2-shard host-mesh scoring equals unsharded, bit for bit."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", SHARD_SCRIPT], env=env,
+                         capture_output=True, text=True, timeout=900)
+    assert "ALL_OK" in out.stdout, out.stdout + "\n---\n" + out.stderr
