@@ -1,0 +1,253 @@
+"""Open-loop overload benchmark: Poisson/burst traffic past saturation.
+
+Closed-loop drains (bench_serving.py) can never overload the service —
+the submitter waits for the server, so the queue self-limits. Real
+traffic doesn't: arrivals follow their own clock. This bench drives
+``RiskService`` with an *open-loop* generator (seeded Poisson
+inter-arrivals, optional bursts) at multiples of the measured saturation
+capacity and records what the admission-control layer does about it:
+
+  * ``overload/capacity``        — closed-loop saturation throughput
+  * ``overload/p99_high@Mx``     — HIGH-priority p99 at offered load M*cap
+    (bounded past saturation is the acceptance criterion: shed-low-first
+    eviction + server-side deadlines keep the HIGH queue short)
+  * ``overload/shed@Mx``         — shed fraction (queue-full rejects +
+    evictions + deadline drops) of offered load
+  * ``overload/silent_loss``     — submitted rids with *no* terminal
+    outcome across every run; must be 0
+  * ``overload/burst``           — p99_high under periodic bursts riding
+    a sub-saturation Poisson base
+  * ``overload/hot_swap_dropped``/``..._spike`` — a ``ModelRegistry``
+    rollout under live load: dropped must be 0; spike is the p99 of
+    requests submitted within the swap window vs steady state
+
+Committed as ``BENCH_9.json`` (via ``run.py --only overload --json``);
+``run.py --smoke`` re-runs a tiny version and gates on bounded
+p99_high@2x, zero silent loss, and a zero-drop hot swap.
+
+The served model is deliberately heavy (wide p, long curve grid, curves
+returned) so saturation sits at a rate one Python generator thread can
+comfortably exceed — the bench measures queueing policy, not submit().
+"""
+import time
+
+import numpy as np
+
+from repro.data.synthetic import SyntheticSpec, make_correlated_survival
+from repro.serving import (ModelRegistry, Priority, QueueFull, RiskService,
+                           ScoringEngine, fit_survival_model)
+
+
+def _models(p, grid, seed=0):
+    """Two artifacts (champion + retrain candidate) on the same schema."""
+    x, t, delta, beta_star = make_correlated_survival(
+        SyntheticSpec(n=512, p=p, k=8, rho=0.5, seed=seed, censor_scale=3.0))
+    grid_t = np.linspace(float(t.min()), float(t.max()), grid,
+                         dtype=np.float32)
+    m1 = fit_survival_model(x, t, delta, beta_star, time_grid=grid_t)
+    m2 = fit_survival_model(x, t, delta,
+                            (beta_star * 0.9).astype(np.float32),
+                            time_grid=grid_t)
+    return x, m1, m2
+
+
+def _service(model, *, max_batch, max_queue, return_curves=True):
+    eng = ScoringEngine(model, use_sparse=False)
+    svc = RiskService(eng, max_batch=max_batch, max_queue=max_queue,
+                      return_curves=return_curves, result_ttl_s=300.0)
+    # warm the full pow-2 bucket ladder: a cold mid-ladder bucket would
+    # bill a jit compile to some unlucky request's latency
+    ladder = tuple(1 << i for i in range((max_batch - 1).bit_length() + 1))
+    eng.prewarm(ladder, kinds=(
+        "score_curves" if return_curves else "score",))
+    return svc
+
+
+def estimate_capacity(svc, feats, n_req):
+    """Closed-loop saturation: submit n_req, drain flat out."""
+    t0 = time.perf_counter()
+    for i in range(n_req):
+        svc.submit(feats[i % len(feats)])
+    svc.drain()
+    return n_req / (time.perf_counter() - t0)
+
+
+def _arrivals(rps, duration_s, seed, burst=None):
+    """Seeded Poisson arrival offsets; ``burst=(every_s, n)`` adds n
+    simultaneous arrivals every every_s seconds."""
+    rng = np.random.default_rng(seed)
+    n = max(int(rps * duration_s * 2), 16)
+    ts = np.cumsum(rng.exponential(1.0 / rps, size=n))
+    ts = ts[ts < duration_s]
+    if burst is not None:
+        every_s, bn = burst
+        spikes = np.repeat(np.arange(every_s, duration_s, every_s), bn)
+        ts = np.sort(np.concatenate([ts, spikes]))
+    return ts
+
+
+def open_loop(svc, feats, *, rps, duration_s, frac_high=0.25,
+              deadline_low_s=0.25, deadline_high_s=None, seed=0,
+              burst=None, mid_run=None):
+    """Drive the service open-loop; returns per-outcome accounting.
+
+    Arrivals keep their own clock: a backlogged schedule submits in a
+    burst rather than waiting for the server (that's the point).
+    ``mid_run`` is an optional callback fired once past duration/2 on
+    its own thread — traffic keeps flowing while it runs (the hot-swap
+    hook); its trigger wall-time is recorded.
+    """
+    import threading
+    arrivals = _arrivals(rps, duration_s, seed, burst)
+    rng = np.random.default_rng(seed + 1)
+    prios = np.where(rng.random(len(arrivals)) < frac_high,
+                     int(Priority.HIGH), int(Priority.LOW))
+    svc.start()
+    submitted = []           # (rid, priority, t_submit_rel)
+    rejected = {Priority.HIGH: 0, Priority.LOW: 0}
+    t_mid = None
+    mid_thread = None
+    t0 = time.perf_counter()
+    for t_arr, prio in zip(arrivals, prios):
+        if mid_run is not None and t_mid is None and t_arr >= duration_s / 2:
+            t_mid = time.perf_counter() - t0
+            mid_thread = threading.Thread(target=mid_run, daemon=True)
+            mid_thread.start()
+        delay = t_arr - (time.perf_counter() - t0)
+        if delay > 0:
+            time.sleep(delay)
+        prio = Priority(int(prio))
+        deadline = (deadline_high_s if prio == Priority.HIGH
+                    else deadline_low_s)
+        f = feats[rng.integers(0, len(feats))]
+        try:
+            rid = svc.submit(f, priority=prio, deadline_s=deadline)
+            submitted.append((rid, prio, t_arr))
+        except QueueFull:
+            rejected[prio] += 1
+    if mid_thread is not None:
+        mid_thread.join(60.0)
+    # let the backlog resolve (shed/expire/score), then stop the loop
+    deadline_drain = time.perf_counter() + 30.0
+    while svc.stats()["queue_depth"] and time.perf_counter() < deadline_drain:
+        time.sleep(0.005)
+    svc.stop()
+    svc.drain()              # flush anything left between stop and empty
+
+    out = {"offered": len(arrivals), "rejected": dict(rejected),
+           "t_mid": t_mid, "duration_s": duration_s,
+           "lat_ms": {Priority.HIGH: [], Priority.LOW: []},
+           "t_sub": {Priority.HIGH: [], Priority.LOW: []},
+           "shed": 0, "expired": 0, "errors": 0, "lost": 0}
+    for rid, prio, t_arr in submitted:
+        resp = svc.result(rid)
+        if resp is None:
+            out["lost"] += 1
+        elif resp.ok:
+            out["lat_ms"][prio].append(resp.latency_s * 1e3)
+            out["t_sub"][prio].append(t_arr)
+        elif resp.error == "shed":
+            out["shed"] += 1
+        elif resp.error == "deadline_exceeded":
+            out["expired"] += 1
+        else:
+            out["errors"] += 1
+    return out
+
+
+def _p99(v):
+    return float(np.percentile(v, 99)) if len(v) else 0.0
+
+
+def _shed_frac(res):
+    lost_to_load = (sum(res["rejected"].values()) + res["shed"]
+                    + res["expired"])
+    return lost_to_load / max(res["offered"], 1)
+
+
+def run(smoke: bool = False):
+    rows = []
+    # heavy-ish model: saturation low enough that one generator thread
+    # can offer 2x+ while Python submit overhead stays negligible
+    p, grid = (128, 128) if smoke else (256, 256)
+    max_batch = 8 if smoke else 16
+    max_queue = 8 * max_batch
+    dur = 1.0 if smoke else 3.0
+    feats_n = 256
+    x, model, model2 = _models(p, grid)
+    rng = np.random.default_rng(7)
+    feats = rng.standard_normal((feats_n, p)).astype(np.float32)
+
+    svc = _service(model, max_batch=max_batch, max_queue=None)
+    cap = estimate_capacity(svc, feats, 128 if smoke else 512)
+    rows.append(("overload/capacity", 1e6 / cap,
+                 f"closed_loop_reqs_per_s={cap:.0f}", cap))
+
+    silent_loss = 0
+    deadline_low = 0.25
+    for mult in ((0.5, 2.0) if smoke else (0.5, 1.0, 2.0, 4.0)):
+        svc = _service(model, max_batch=max_batch, max_queue=max_queue)
+        res = open_loop(svc, feats, rps=mult * cap, duration_s=dur,
+                        deadline_low_s=deadline_low, seed=int(mult * 10))
+        silent_loss += res["lost"] + res["errors"]
+        p99h = _p99(res["lat_ms"][Priority.HIGH])
+        p99l = _p99(res["lat_ms"][Priority.LOW])
+        tag = f"{mult:g}x"
+        rows.append((f"overload/p99_high@{tag}", p99h * 1e3,
+                     f"p99_low_ms={p99l:.1f} offered={res['offered']} "
+                     f"served_high={len(res['lat_ms'][Priority.HIGH])}",
+                     p99h))
+        rows.append((f"overload/shed@{tag}", 0.0,
+                     f"rejected={sum(res['rejected'].values())} "
+                     f"evicted={res['shed']} expired={res['expired']}",
+                     _shed_frac(res)))
+
+    # bursts riding a sub-saturation base: every 0.25s, 4*max_batch at once
+    svc = _service(model, max_batch=max_batch, max_queue=max_queue)
+    res = open_loop(svc, feats, rps=0.5 * cap, duration_s=dur,
+                    deadline_low_s=deadline_low, seed=42,
+                    burst=(0.25, 4 * max_batch))
+    silent_loss += res["lost"] + res["errors"]
+    p99h = _p99(res["lat_ms"][Priority.HIGH])
+    rows.append(("overload/burst", p99h * 1e3,
+                 f"base=0.5x burst={4 * max_batch}req/250ms "
+                 f"shed_frac={_shed_frac(res):.2f}", p99h))
+
+    # hot swap under load: registry rollout at mid-run, nothing dropped
+    svc = _service(model, max_batch=max_batch, max_queue=None)
+    reg = ModelRegistry(svc)
+    reg.load("champ", model)
+    reg.swap("champ")
+    swap_gen = []
+    res = open_loop(
+        svc, feats, rps=0.4 * cap, duration_s=dur, frac_high=0.25,
+        deadline_low_s=None, seed=5,
+        mid_run=lambda: swap_gen.append(reg.rollout("retrain", model2)))
+    dropped = (res["lost"] + res["errors"] + res["shed"] + res["expired"]
+               + sum(res["rejected"].values()))
+    lat_all = res["lat_ms"][Priority.HIGH] + res["lat_ms"][Priority.LOW]
+    t_all = res["t_sub"][Priority.HIGH] + res["t_sub"][Priority.LOW]
+    lat_all, t_all = np.asarray(lat_all), np.asarray(t_all)
+    t_mid = res["t_mid"] if res["t_mid"] is not None else dur / 2
+    win = (t_all >= t_mid - 0.1) & (t_all <= t_mid + 0.4)
+    p99_win = _p99(lat_all[win])
+    p99_steady = _p99(lat_all[~win]) or 1e-9
+    rows.append(("overload/hot_swap_dropped", 0.0,
+                 f"gen={swap_gen[0] if swap_gen else 'none'} "
+                 f"served={len(lat_all)} live={reg.status()['live']}",
+                 float(dropped)))
+    rows.append(("overload/hot_swap_spike", p99_win * 1e3,
+                 f"p99_swap_window_ms={p99_win:.1f} "
+                 f"p99_steady_ms={p99_steady:.1f} "
+                 f"x{p99_win / p99_steady:.1f}", p99_win / p99_steady))
+
+    rows.append(("overload/silent_loss", 0.0,
+                 "submitted rids with no terminal outcome (must be 0)",
+                 float(silent_loss)))
+    return rows
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in run():
+        print(f"{row[0]},{row[1]:.1f},{row[2]}")

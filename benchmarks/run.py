@@ -28,6 +28,11 @@ must record **zero monotonicity violations** — plus the PR-8 scale gates:
 a tiny ``fit_stream`` (zero violations on the live counter), a 2-shard
 host-mesh scoring parity check (subprocess, bit-identical to unsharded),
 and schema validation of the committed ``BENCH_8.json`` when present.
+The PR-9 robustness gates ride along: a tiny open-loop overload run
+(HIGH-priority p99 must stay bounded at 2x saturation, a live hot swap
+must drop nothing, every submitted request must reach a terminal
+outcome) and schema + zero-drop validation of the committed
+``BENCH_9.json`` when present.
 
 Runnable both as ``python -m benchmarks.run`` (with ``PYTHONPATH=src``)
 and directly as ``python benchmarks/run.py``.
@@ -42,7 +47,7 @@ import sys
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 BENCH_KEYS = ("efficiency", "selection_f1", "selection_real", "kernels",
-              "serving", "scale")
+              "serving", "scale", "overload")
 
 # the bench-record schema BENCH_*.json files are validated against
 RECORD_REQUIRED = {
@@ -84,11 +89,12 @@ def _setup_runtime(verbose: bool = False):
 
 def _import_benches():
     try:
-        from . import (bench_efficiency, bench_kernels, bench_scale,
-                       bench_selection_f1, bench_selection_real,
+        from . import (bench_efficiency, bench_kernels, bench_overload,
+                       bench_scale, bench_selection_f1, bench_selection_real,
                        bench_serving)
     except ImportError:
-        from benchmarks import (bench_efficiency, bench_kernels, bench_scale,
+        from benchmarks import (bench_efficiency, bench_kernels,
+                                bench_overload, bench_scale,
                                 bench_selection_f1, bench_selection_real,
                                 bench_serving)
     return {
@@ -98,6 +104,7 @@ def _import_benches():
         "kernels": bench_kernels.run,             # Cor. 3.3 machinery
         "serving": bench_serving.run,             # inference subsystem
         "scale": bench_scale.run,                 # streaming + sharded n
+        "overload": bench_overload.run,           # robustness under overload
     }
 
 
@@ -272,8 +279,8 @@ def _smoke() -> int:
     env["PYTHONPATH"] = (os.path.join(ROOT, "src")
                          + os.pathsep + env.get("PYTHONPATH", ""))
     tests = [os.path.join(ROOT, "tests", f)
-             for f in ("test_serving.py", "test_kernels.py",
-                       "test_autotune.py")]
+             for f in ("test_serving.py", "test_robustness.py",
+                       "test_kernels.py", "test_autotune.py")]
     print("[smoke] tier-1:", "python -m pytest -x -q", *tests, flush=True)
     rc = subprocess.call([sys.executable, "-m", "pytest", "-x", "-q",
                           *tests], env=env, cwd=ROOT)
@@ -404,6 +411,65 @@ def _smoke() -> int:
               f"shard speedup x{max(speedups):.2f})")
     else:
         print("[smoke] no BENCH_8.json committed yet — scale gate skipped")
+
+    # overload gate: a tiny open-loop run must keep HIGH-priority p99
+    # bounded past saturation, drop nothing during a live hot swap, and
+    # account for every submitted request (zero silent loss)
+    rows = list(benches["overload"](smoke=True))
+    _print_rows(rows)
+    vals = {row[0]: row[3] for row in rows if len(row) > 3}
+    p99_2x = vals.get("overload/p99_high@2x")     # milliseconds
+    if p99_2x is None or not 0.0 < p99_2x <= 500.0:
+        print("[smoke] FAILED: overload p99_high@2x unbounded or missing "
+              f"({None if p99_2x is None else f'{p99_2x:.1f}ms'})")
+        return 1
+    if vals.get("overload/silent_loss", 1.0) != 0.0:
+        print("[smoke] FAILED: overload run lost requests silently "
+              f"({vals.get('overload/silent_loss')})")
+        return 1
+    if vals.get("overload/hot_swap_dropped", 1.0) != 0.0:
+        print("[smoke] FAILED: hot swap under load dropped requests "
+              f"({vals.get('overload/hot_swap_dropped')})")
+        return 1
+    print(f"[smoke] overload ok (p99_high@2x={p99_2x:.1f}ms, "
+          "hot swap zero-drop)")
+
+    # BENCH_9 gate: the committed overload artifact must satisfy the
+    # record schema and carry a zero-drop hot swap + zero silent loss
+    b9 = os.path.join(ROOT, "BENCH_9.json")
+    if os.path.exists(b9):
+        try:
+            with open(b9) as f:
+                b9_records = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"[smoke] FAILED: BENCH_9.json unreadable: {e}")
+            return 1
+        errors = validate_records(b9_records)
+        if errors:
+            print("[smoke] FAILED: BENCH_9.json violates schema:")
+            for e in errors:
+                print(f"[smoke]   {e}")
+            return 1
+        by_name = {r.get("name"): r.get("value")
+                   for r in b9_records if isinstance(r, dict)}
+        for key in ("overload/p99_high@2x", "overload/hot_swap_dropped",
+                    "overload/silent_loss"):
+            if key not in by_name:
+                print(f"[smoke] FAILED: BENCH_9.json missing '{key}'")
+                return 1
+        if by_name["overload/hot_swap_dropped"] != 0.0:
+            print("[smoke] FAILED: committed BENCH_9.json records a "
+                  "lossy hot swap")
+            return 1
+        if by_name["overload/silent_loss"] != 0.0:
+            print("[smoke] FAILED: committed BENCH_9.json records "
+                  "silent request loss")
+            return 1
+        print(f"[smoke] BENCH_9.json ok ({len(b9_records)} records, "
+              f"p99_high@2x={by_name['overload/p99_high@2x']:.1f}ms)")
+    else:
+        print("[smoke] no BENCH_9.json committed yet — overload gate on "
+              "committed artifact skipped")
     print("[smoke] OK")
     return 0
 

@@ -1,10 +1,14 @@
-"""End-to-end risk API: beam-search CPH -> artifact -> batched serving.
+"""End-to-end risk API: beam-search CPH -> artifact -> registry serving.
 
 Fits a cardinality-constrained model with the paper's beam-search CD,
 packages it as a SurvivalModel artifact (k-sparse beta + Breslow baseline
-on a time grid), round-trips it through save/load, and serves risk /
-median-survival queries through the continuous-batching RiskService —
-the O(k)-per-request payoff of very sparse CPH models.
+on a time grid), round-trips it through save/load (sha256-verified), and
+serves risk / median-survival queries through the continuous-batching
+RiskService fronted by a ModelRegistry: the engine is checksum-loaded
+and jit-prewarmed before going live, queries carry priorities and
+server-side deadlines, and a retrained model is hot-swapped into the
+live slot mid-traffic with zero dropped requests — the O(k)-per-request
+payoff of very sparse CPH models, with fleet-grade rollout semantics.
 
 Telemetry is on by default here: spans go to ``$REPRO_TRACE_FILE`` when
 set, else to ``serve_risk_api_trace.jsonl`` in the working directory, and
@@ -27,7 +31,8 @@ from repro.analysis.report import latency_breakdown_table
 from repro.core import beam, cox
 from repro.data.synthetic import SyntheticSpec, make_correlated_survival
 from repro.obs import trace
-from repro.serving import (RiskService, ScoringEngine, SurvivalModel,
+from repro.serving import (ModelRegistry, Priority, RiskService,
+                           ScoringEngine, SurvivalModel,
                            fit_survival_model)
 
 
@@ -55,17 +60,31 @@ def main():
     model = fit_survival_model(x, t, delta, beta)
     with tempfile.TemporaryDirectory() as d:
         path = model.save(d + "/model")
-        model = SurvivalModel.load(path)
+        model = SurvivalModel.load(path)   # sha256-verified per leaf
     print(f"[artifact] p={model.p} k={model.k} grid={model.n_grid} "
-          f"ties={model.ties} (save/load round-trip ok)")
+          f"ties={model.ties} (save/load round-trip ok, checksums verified)")
 
-    engine = ScoringEngine(model)   # sparse fast path auto-selected
-    service = RiskService(engine, max_batch=32, return_curves=False)
+    service = RiskService(None, max_batch=32, return_curves=False)
+    registry = ModelRegistry(service)      # sparse fast path auto-selected
+    entry = registry.load("champ", model)  # verify + build + warm buckets
+    registry.swap("champ")                 # atomic promote to the live slot
+    print(f"[registry] live={registry.live_id} "
+          f"gen={registry.generation} warm_compiles={entry.compiles}")
     service.start()
 
     rng = np.random.default_rng(0)
     queries = rng.standard_normal((100, spec.p)).astype(np.float32)
-    rids = [service.submit(q) for q in queries]
+    rids = [service.submit(q,
+                           priority=(Priority.HIGH if i % 4 == 0
+                                     else Priority.LOW),
+                           deadline_s=None if i % 4 == 0 else 2.0)
+            for i, q in enumerate(queries)]
+    # hot-swap a retrained candidate mid-traffic: load + warm happen off
+    # the serving path; queued requests score on the new engine, zero drops
+    retrained = fit_survival_model(x, t, delta,
+                                   (beta * 0.95).astype(np.float32))
+    registry.rollout("retrain", retrained)
+    rids += [service.submit(q, priority=Priority.HIGH) for q in queries[:20]]
     responses = [service.wait(rid) for rid in rids]
     service.stop()
 
@@ -75,8 +94,15 @@ def main():
           f"{st['mean_batch']:.1f}, p50 {st['latency_p50_ms']:.2f}ms, "
           f"p99 {st['latency_p99_ms']:.2f}ms, queue_depth "
           f"{st['queue_depth']}, rejected {st['rejected_count']}, "
-          f"timeouts {st['timeout_count']})")
-    for r in responses[:3]:
+          f"shed {st['shed_count']}, expired {st['expired_count']}, "
+          f"errors {st['error_count']}, timeouts {st['timeout_count']})")
+    print(f"[serve] health={service.health()} engine_swaps="
+          f"{st['engine_swaps']} live={registry.live_id} "
+          f"gen={registry.generation}")
+    ok = [r for r in responses if r.ok]
+    print(f"[serve] {len(ok)}/{len(responses)} scored ok "
+          f"(every submitted rid reached a terminal outcome)")
+    for r in ok[:3]:
         med = "inf" if np.isinf(r.median) else f"{r.median:.3f}"
         print(f"  req {r.rid}: risk={r.risk:.3f} median_survival={med} "
               f"trace={r.trace_id}")

@@ -119,6 +119,19 @@ class Gauge(_Metric):
     def dec(self, amount: float = 1.0, **labels: str) -> None:
         self.inc(-amount, **labels)
 
+    def set_state(self, state: str, states: Sequence[str]) -> None:
+        """One-hot enum gauge (the Prometheus state-set idiom): the
+        current state's series reads 1, every other known state 0 — so a
+        scrape always sees exactly one active state and dashboards can
+        alert on e.g. ``service_health_state{state="down"} == 1``.
+        Requires exactly one label naming the state dimension."""
+        if len(self.label_names) != 1:
+            raise ValueError("state gauges need exactly one label")
+        name = self.label_names[0]
+        with self._lock:
+            for s in states:
+                self._values[(str(s),)] = 1.0 if s == state else 0.0
+
     def value(self, **labels: str) -> float:
         if self._fn is not None and not labels:
             return float(self._fn())

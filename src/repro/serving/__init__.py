@@ -1,4 +1,4 @@
-"""Survival inference serving subsystem — from fitted beta to risk API.
+"""Survival inference serving subsystem — from fitted beta to risk fleet.
 
 Module map
 ----------
@@ -8,7 +8,9 @@ Module map
     per stratum), built in JAX from training data via the same O(n)
     suffix-scan machinery as the solvers (``fit_survival_model``), and
     persisted with train/checkpoint.py's npy-per-leaf + atomic-rename
-    idiom (``save`` / ``load``).
+    idiom (``save`` / ``load``). The manifest carries a sha256 per leaf;
+    ``load`` verifies them, so a truncated or bit-flipped ``.npy`` raises
+    ``ArtifactCorrupt`` instead of scoring garbage.
 
 ``engine.py``
     ``ScoringEngine`` — jit-compiled batched scoring: risk scores,
@@ -16,21 +18,50 @@ Module map
     (fused Pallas kernel ``kernels/survival_curves.py`` on the
     unstratified path), and median-survival queries. k-sparse models
     gather only support columns (O(k) per request). Batches pad to
-    power-of-two buckets so the jit cache stays logarithmic.
+    power-of-two buckets so the jit cache stays logarithmic;
+    ``prewarm()`` compiles a bucket set ahead of going live.
 
 ``service.py``
-    ``RiskService`` — continuous micro-batching request queue mirroring
-    launch/serve.py's loop: submit -> queue -> micro-batch -> jit score ->
-    respond, with req/s and p50/p99 latency instrumentation, per-batch
-    tracing spans + always-on metrics (``repro.obs``), a bounded-queue
-    shedding mode (``QueueFull``), and explicit ``ScoreTimeout`` waits.
+    ``RiskService`` — continuous micro-batching with fleet-grade
+    admission control: two priority classes (``Priority.HIGH`` /
+    ``Priority.LOW``) with strict-priority dequeue and shed-low-first
+    eviction at a bounded queue, server-side per-request deadlines
+    (expired work dropped at batch-form time with
+    ``error="deadline_exceeded"`` responses, never a wasted jit
+    dispatch), a condition-signaled ``wait()`` (no busy-poll), and a
+    crash-safe drain loop — engine exceptions become per-request error
+    responses plus a ``SERVING``/``DEGRADED``/``DOWN`` readiness
+    transition (``health()``), with bounded exponential-backoff retry
+    for transients. Uncollected responses are evicted (timeout abandon +
+    TTL sweep) so a long-running service stays bounded.
+
+``registry.py``
+    ``ModelRegistry`` — named model fleet over one service slot:
+    ``load`` (checksum-verified) -> background ``prewarm`` -> atomic
+    ``swap`` (generation-counted, zero dropped requests) -> ``unload``.
+    ``rollout()`` chains them for one-call, zero-downtime model updates
+    under live traffic.
+
+``chaos.py``
+    Deterministic fault injection — ``ChaosEngine`` (seeded/scheduled
+    engine exceptions + latency spikes), ``corrupt_artifact`` (truncate /
+    bit-flip a leaf), ``flood`` (concurrent queue pressure) — the
+    injectors the robustness tests and the overload benchmark drive to
+    prove every failure mode degrades gracefully.
 
 End-to-end wiring: ``examples/serve_risk_api.py`` (beam-search model ->
-artifact -> service); throughput/latency numbers:
-``benchmarks/bench_serving.py``; roofline cost models for the scoring
-kernels: ``analysis/roofline.py`` (SERVING_KERNELS).
+artifact -> registry -> service, with a live hot-swap);
+throughput/latency numbers: ``benchmarks/bench_serving.py``; open-loop
+overload + hot-swap-under-load benchmark: ``benchmarks/bench_overload.py``
+(committed as ``BENCH_9.json``, gated by ``run.py --smoke``); roofline
+cost models for the scoring kernels: ``analysis/roofline.py``
+(SERVING_KERNELS).
 """
-from .artifacts import SurvivalModel, fit_survival_model  # noqa: F401
+from .artifacts import (ArtifactCorrupt, SurvivalModel,  # noqa: F401
+                        fit_survival_model)
+from .chaos import ChaosEngine, EngineFault, corrupt_artifact  # noqa: F401
 from .engine import ScoringEngine  # noqa: F401
-from .service import (QueueFull, RiskService, ScoreRequest,  # noqa: F401
-                      ScoreResponse, ScoreTimeout)
+from .registry import ModelEntry, ModelRegistry  # noqa: F401
+from .service import (HEALTH_STATES, Priority, QueueFull,  # noqa: F401
+                      RiskService, ScoreRequest, ScoreResponse,
+                      ScoreTimeout)

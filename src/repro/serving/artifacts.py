@@ -18,11 +18,15 @@ rescaled by the stabilizer. Efron replaces S0 by the tie-corrected
 
 Persistence follows train/checkpoint.py's idiom: one .npy per array field
 plus a manifest.json, written to a tmp dir that is atomically renamed, so
-a crash mid-save can never corrupt a served artifact.
+a crash mid-save can never corrupt a served artifact. The manifest
+carries a sha256 per array leaf (format 2); ``load`` verifies them so a
+truncated or bit-flipped ``.npy`` raises ``ArtifactCorrupt`` instead of
+scoring garbage. Format-1 manifests (no checksums) still load.
 """
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 import json
 import os
 import shutil
@@ -36,6 +40,18 @@ from ..core import cox
 _ARRAY_FIELDS = ("beta", "time_grid", "base_cumhaz", "support",
                  "beta_support", "strata_labels")
 _MANIFEST = "manifest.json"
+
+
+class ArtifactCorrupt(RuntimeError):
+    """A persisted SurvivalModel failed integrity checks on load."""
+
+
+def _sha256_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,15 +93,17 @@ class SurvivalModel:
         if os.path.exists(tmp):
             shutil.rmtree(tmp)
         os.makedirs(tmp)
-        manifest = {"format": 1, "ties": self.ties, "arrays": {}}
+        manifest = {"format": 2, "ties": self.ties, "arrays": {}}
         for name in _ARRAY_FIELDS:
             arr = getattr(self, name)
             if arr is None:
                 continue
             arr = np.asarray(arr)
-            np.save(os.path.join(tmp, f"{name}.npy"), arr)
+            leaf = os.path.join(tmp, f"{name}.npy")
+            np.save(leaf, arr)
             manifest["arrays"][name] = {
-                "shape": list(arr.shape), "dtype": str(arr.dtype)}
+                "shape": list(arr.shape), "dtype": str(arr.dtype),
+                "sha256": _sha256_file(leaf)}
         with open(os.path.join(tmp, _MANIFEST), "w") as f:
             json.dump(manifest, f)
         # overwrite by renaming the live artifact aside first: a crash at
@@ -101,11 +119,37 @@ class SurvivalModel:
         return path
 
     @classmethod
-    def load(cls, path: str) -> "SurvivalModel":
-        with open(os.path.join(path, _MANIFEST)) as f:
-            manifest = json.load(f)
-        arrays = {name: np.load(os.path.join(path, f"{name}.npy"))
-                  for name in manifest["arrays"]}
+    def load(cls, path: str, verify: bool = True) -> "SurvivalModel":
+        """Load an artifact, verifying per-leaf sha256 checksums when the
+        manifest carries them (format >= 2). A missing, truncated, or
+        bit-flipped leaf raises ``ArtifactCorrupt`` naming the leaf —
+        never a silently-wrong served model."""
+        try:
+            with open(os.path.join(path, _MANIFEST)) as f:
+                manifest = json.load(f)
+        except (OSError, ValueError) as e:
+            raise ArtifactCorrupt(
+                f"artifact {path!r}: unreadable manifest ({e})") from e
+        arrays = {}
+        for name, spec in manifest["arrays"].items():
+            leaf = os.path.join(path, f"{name}.npy")
+            if not os.path.exists(leaf):
+                raise ArtifactCorrupt(
+                    f"artifact {path!r}: missing leaf {name}.npy")
+            want = spec.get("sha256") if isinstance(spec, dict) else None
+            if verify and want is not None:
+                got = _sha256_file(leaf)
+                if got != want:
+                    raise ArtifactCorrupt(
+                        f"artifact {path!r}: checksum mismatch on "
+                        f"{name}.npy (manifest {want[:12]}..., file "
+                        f"{got[:12]}...) — truncated or corrupted leaf")
+            try:
+                arrays[name] = np.load(leaf)
+            except (OSError, ValueError) as e:
+                raise ArtifactCorrupt(
+                    f"artifact {path!r}: unreadable leaf {name}.npy "
+                    f"({e})") from e
         return cls(ties=manifest["ties"], **arrays)
 
 

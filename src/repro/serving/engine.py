@@ -273,6 +273,28 @@ class ScoringEngine:
         return self._run("score_curves" if with_curves else "score",
                          x, strata)
 
+    def prewarm(self, batch_sizes=(1, 64), kinds=("score",),
+                strata: bool = False) -> int:
+        """Compile (and execute once, on zeros) the jit buckets a service
+        will hit, so the first live request after a hot-swap never pays a
+        trace+compile. ``batch_sizes`` are rounded up to their pow-2
+        buckets; duplicate buckets compile once. Returns the number of
+        fresh compilations. Safe to call from a background thread — the
+        registry pre-warms new models off the serving path."""
+        before = self.compiles
+        seen = set()
+        for b in batch_sizes:
+            _, _, bucket = self._pad(np.zeros((int(b), 1), np.float32))
+            if bucket in seen:
+                continue
+            seen.add(bucket)
+            x = np.zeros((bucket, self.feature_dim), np.float32)
+            s = (np.zeros(bucket, np.int32)
+                 if strata and self.model.n_strata > 1 else None)
+            for kind in kinds:
+                self._run(kind, x, s)
+        return self.compiles - before
+
     def cache_info(self) -> dict:
         return {"entries": len(self._cache), "compiles": self.compiles,
                 "calls": self.calls, "shard": self.shard}

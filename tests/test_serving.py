@@ -327,7 +327,7 @@ def test_stats_keys_present_on_fresh_service():
     assert np.isnan(st["reqs_per_s"])
 
 
-def test_wait_timeout_raises_score_timeout():
+def test_wait_timeout_raises_score_timeout_and_abandons():
     x, t, delta, beta = _problem(n=80, p=6)
     svc = RiskService(ScoringEngine(fit_survival_model(x, t, delta, beta)))
     rid = svc.submit(x[0])          # never stepped: no serving thread
@@ -336,9 +336,12 @@ def test_wait_timeout_raises_score_timeout():
     assert ei.value.rid == rid
     assert str(rid) in str(ei.value)
     assert svc.stats()["timeout_count"] == 1
-    # the request is still queued and scoreable afterwards
-    svc.drain()
-    assert svc.result(rid) is not None
+    # abandoned: the queued copy is dropped at batch-form time (no jit
+    # work wasted) and no response accumulates for it
+    assert svc.drain() == 0
+    assert svc.result(rid) is None
+    assert svc.stats()["results_evicted"] == 1
+    assert svc.stats()["results_pending"] == 0
 
 
 def test_bounded_queue_sheds_with_queue_full():
