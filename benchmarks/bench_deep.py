@@ -1,0 +1,137 @@
+"""Deep-survival benchmark: FastCPH-style backbone + paper-solver head.
+
+Rows are (name, us_per_call, derived[, value]):
+  * deep/train            — us per train step under the exact CPH
+                            objective (post-compile); value = steps/s
+  * deep/refit            — beam-search sparse refit on frozen pooled
+                            features; value = seconds
+  * deep/cindex_deep      — held-out c-index of the backbone risk head
+  * deep/cindex_sparse    — c-index of the k-sparse refit head (the
+                            interpretable model the artifact serves)
+  * deep/cindex_linear    — linear CPH on raw bag-of-token frequencies,
+                            fit with the same solver family: what the
+                            paper's machinery achieves *without* the
+                            backbone (the deep-vs-linear comparison)
+  * deep/served_match     — 1.0 when the exported artifact, rolled out
+                            through ModelRegistry into RiskService,
+                            returns the sparse head's risks (rtol 1e-4)
+
+The linear baseline sees the same observations as the refit: per-sequence
+token-frequency features, so the comparison isolates what representation
+learning adds over the raw featurization.
+"""
+import os
+import tempfile
+import time
+
+import numpy as np
+
+import jax
+
+from repro.core import cox, solvers
+from repro.data.pipeline import SurvivalTextStream
+from repro.models import build_model
+from repro.serving import ModelRegistry, RiskService
+from repro.survival import deep
+from repro.survival.metrics import cindex
+from repro.train.trainer import make_train_step
+from repro.configs.base import TrainConfig
+
+
+def _token_frequency_features(stream, cfg, start_step, n_batches):
+    """(n, vocab) per-sequence token histograms — the raw featurization a
+    linear CPH gets when no backbone learns the representation."""
+    feats, times, events = [], [], []
+    for step in range(start_step, start_step + n_batches):
+        b = stream.batch_for_step(step)
+        counts = np.stack([np.bincount(row, minlength=cfg.vocab_size)
+                           for row in b["tokens"]]).astype(np.float32)
+        feats.append(counts / b["tokens"].shape[1])
+        times.append(b["time"])
+        events.append(b["event"])
+    return (np.concatenate(feats), np.concatenate(times),
+            np.concatenate(events))
+
+
+def _served_risks(artifact, features):
+    """Roll the artifact through registry -> service; return served risks."""
+    with tempfile.TemporaryDirectory(prefix="bench_deep_") as td:
+        path = os.path.join(td, "artifact")
+        artifact.save(path)
+        svc = RiskService(None, max_batch=16)
+        reg = ModelRegistry(svc, prewarm_batches=(1, 16))
+        reg.rollout("bench_deep", path)
+        svc.start()
+        try:
+            rids = [svc.submit(f) for f in features]
+            return np.array([svc.wait(r).risk for r in rids])
+        finally:
+            svc.stop()
+
+
+def run(smoke: bool = False):
+    rows = []
+    dcfg = deep.DeepSurvivalConfig(
+        steps=12 if smoke else 120, batch=16 if smoke else 32,
+        seq=20 if smoke else 48, k=4 if smoke else 8,
+        refit_batches=2 if smoke else 4,
+        warmup_steps=4 if smoke else 20, log_every=0)
+    cfg = deep.model_config(dcfg)
+    model = build_model(cfg)
+
+    # -- train: time steady-state steps (first step pays the jit compile) --
+    stream = SurvivalTextStream(cfg.vocab_size, dcfg.seq, dcfg.batch,
+                                seed=dcfg.seed)
+    state = deep.init_state(model, dcfg.seed)
+    tcfg = TrainConfig(learning_rate=dcfg.learning_rate,
+                       warmup_steps=dcfg.warmup_steps,
+                       total_steps=dcfg.steps)
+    step_fn = jax.jit(make_train_step(model, tcfg, objective="cox"))
+    state, m = step_fn(state, stream.batch_for_step(0))   # compile
+    jax.block_until_ready(m["loss"])
+    t0 = time.perf_counter()
+    for step in range(1, dcfg.steps):
+        state, m = step_fn(state, stream.batch_for_step(step))
+    jax.block_until_ready(m["loss"])
+    dt = time.perf_counter() - t0
+    steps_per_s = (dcfg.steps - 1) / dt
+    rows.append(("deep/train", dt / (dcfg.steps - 1) * 1e6,
+                 f"steps_per_s={steps_per_s:.2f} arch={cfg.name} "
+                 f"batch={dcfg.batch}", steps_per_s))
+
+    # -- refit: the paper's beam-search CD on frozen pooled features -------
+    held = deep.collect_features(model, state, stream, dcfg.steps,
+                                 dcfg.refit_batches)
+    t0 = time.perf_counter()
+    beam, beta, artifact = deep.refit_and_export(
+        held["features"], held["time"], held["event"],
+        k=dcfg.k, beam_width=dcfg.beam_width, grid_size=dcfg.grid_size)
+    dt_refit = time.perf_counter() - t0
+    nnz = int((np.abs(beta) > 1e-8).sum())
+    rows.append(("deep/refit", dt_refit * 1e6,
+                 f"k={dcfg.k} nnz={nnz} n={len(held['time'])} "
+                 f"p={cfg.d_model}", dt_refit))
+
+    # -- quality: deep head vs sparse refit vs raw-feature linear CPH ------
+    ci_deep = cindex(held["time"], held["event"], held["risk_deep"])
+    ci_sparse = cindex(held["time"], held["event"],
+                       held["features"] @ beta)
+    xf, tf_, ef = _token_frequency_features(stream, cfg, dcfg.steps,
+                                            dcfg.refit_batches)
+    lin = solvers.fit_cd_tol(cox.prepare(xf, tf_, ef), 0.0, 0.1)
+    ci_linear = cindex(tf_, ef, xf @ np.asarray(lin.beta))
+    rows.append(("deep/cindex_deep", 0.0,
+                 f"heldout_batches={dcfg.refit_batches}", float(ci_deep)))
+    rows.append(("deep/cindex_sparse", 0.0, f"nnz={nnz}",
+                 float(ci_sparse)))
+    rows.append(("deep/cindex_linear", 0.0,
+                 f"p={cfg.vocab_size} (token frequencies)",
+                 float(ci_linear)))
+
+    # -- serving: artifact -> registry -> RiskService must match ----------
+    served = _served_risks(artifact, held["features"][:16])
+    expect = np.exp(np.clip(held["features"][:16] @ beta, -30.0, 30.0))
+    match = float(np.allclose(served, expect, rtol=1e-4))
+    rows.append(("deep/served_match", 0.0,
+                 f"requests=16 registry_rollout=1", match))
+    return rows

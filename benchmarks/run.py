@@ -32,7 +32,12 @@ The PR-9 robustness gates ride along: a tiny open-loop overload run
 (HIGH-priority p99 must stay bounded at 2x saturation, a live hot swap
 must drop nothing, every submitted request must reach a terminal
 outcome) and schema + zero-drop validation of the committed
-``BENCH_9.json`` when present.
+``BENCH_9.json`` when present. The PR-10 deep-survival gate closes the
+loop through the revived model zoo: a tiny backbone trains under the
+exact CPH objective, the beam-search refit head exports as a serving
+artifact, and that artifact must score through ModelRegistry/RiskService
+with exactly the sparse head's risks (plus schema + headline validation
+of the committed ``BENCH_10.json``).
 
 Runnable both as ``python -m benchmarks.run`` (with ``PYTHONPATH=src``)
 and directly as ``python benchmarks/run.py``.
@@ -47,7 +52,7 @@ import sys
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 BENCH_KEYS = ("efficiency", "selection_f1", "selection_real", "kernels",
-              "serving", "scale", "overload")
+              "serving", "scale", "overload", "deep")
 
 # the bench-record schema BENCH_*.json files are validated against
 RECORD_REQUIRED = {
@@ -89,11 +94,11 @@ def _setup_runtime(verbose: bool = False):
 
 def _import_benches():
     try:
-        from . import (bench_efficiency, bench_kernels, bench_overload,
-                       bench_scale, bench_selection_f1, bench_selection_real,
-                       bench_serving)
+        from . import (bench_deep, bench_efficiency, bench_kernels,
+                       bench_overload, bench_scale, bench_selection_f1,
+                       bench_selection_real, bench_serving)
     except ImportError:
-        from benchmarks import (bench_efficiency, bench_kernels,
+        from benchmarks import (bench_deep, bench_efficiency, bench_kernels,
                                 bench_overload, bench_scale,
                                 bench_selection_f1, bench_selection_real,
                                 bench_serving)
@@ -105,6 +110,7 @@ def _import_benches():
         "serving": bench_serving.run,             # inference subsystem
         "scale": bench_scale.run,                 # streaming + sharded n
         "overload": bench_overload.run,           # robustness under overload
+        "deep": bench_deep.run,                   # FastCPH-style deep head
     }
 
 
@@ -280,7 +286,8 @@ def _smoke() -> int:
                          + os.pathsep + env.get("PYTHONPATH", ""))
     tests = [os.path.join(ROOT, "tests", f)
              for f in ("test_serving.py", "test_robustness.py",
-                       "test_kernels.py", "test_autotune.py")]
+                       "test_kernels.py", "test_autotune.py",
+                       "test_pspec.py")]
     print("[smoke] tier-1:", "python -m pytest -x -q", *tests, flush=True)
     rc = subprocess.call([sys.executable, "-m", "pytest", "-x", "-q",
                           *tests], env=env, cwd=ROOT)
@@ -469,6 +476,60 @@ def _smoke() -> int:
               f"p99_high@2x={by_name['overload/p99_high@2x']:.1f}ms)")
     else:
         print("[smoke] no BENCH_9.json committed yet — overload gate on "
+              "committed artifact skipped")
+
+    # deep-survival gate: a tiny train -> refit -> export run must learn a
+    # better-than-random deep head and the exported artifact must serve
+    # through ModelRegistry/RiskService with exactly the sparse head's
+    # risks (the zoo + solver + serving stack all meeting in one path —
+    # the 41-test get_abstract_mesh break would fail here immediately)
+    rows = list(benches["deep"](smoke=True))
+    _print_rows(rows)
+    vals = {row[0]: row[3] for row in rows if len(row) > 3}
+    ci_deep = vals.get("deep/cindex_deep")
+    if ci_deep is None or not 0.55 <= ci_deep <= 1.0:
+        print("[smoke] FAILED: deep head c-index missing or ~random "
+              f"({ci_deep})")
+        return 1
+    if vals.get("deep/served_match", 0.0) != 1.0:
+        print("[smoke] FAILED: served risks diverge from the sparse "
+              f"refit head (match={vals.get('deep/served_match')})")
+        return 1
+    print(f"[smoke] deep survival ok (cindex_deep={ci_deep:.3f}, "
+          "served risks match)")
+
+    # BENCH_10 gate: the committed deep artifact must satisfy the record
+    # schema, carry the c-index headline, and record a clean serving match
+    b10 = os.path.join(ROOT, "BENCH_10.json")
+    if os.path.exists(b10):
+        try:
+            with open(b10) as f:
+                b10_records = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"[smoke] FAILED: BENCH_10.json unreadable: {e}")
+            return 1
+        errors = validate_records(b10_records)
+        if errors:
+            print("[smoke] FAILED: BENCH_10.json violates schema:")
+            for e in errors:
+                print(f"[smoke]   {e}")
+            return 1
+        by_name = {r.get("name"): r.get("value")
+                   for r in b10_records if isinstance(r, dict)}
+        for key in ("deep/train", "deep/refit", "deep/cindex_deep",
+                    "deep/cindex_linear", "deep/served_match"):
+            if key not in by_name:
+                print(f"[smoke] FAILED: BENCH_10.json missing '{key}'")
+                return 1
+        if by_name["deep/served_match"] != 1.0:
+            print("[smoke] FAILED: committed BENCH_10.json records a "
+                  "serving mismatch")
+            return 1
+        print(f"[smoke] BENCH_10.json ok ({len(b10_records)} records, "
+              f"cindex_deep={by_name['deep/cindex_deep']:.3f} vs "
+              f"linear={by_name['deep/cindex_linear']:.3f})")
+    else:
+        print("[smoke] no BENCH_10.json committed yet — deep gate on "
               "committed artifact skipped")
     print("[smoke] OK")
     return 0

@@ -1,6 +1,7 @@
-"""End-to-end driver: train a ~100M-parameter Mamba2 backbone with the
-paper's CPH objective (deep survival head) for a few hundred steps, then
-beam-search a sparse interpretable head on the frozen features.
+"""End-to-end driver: train a Mamba2 backbone with the paper's CPH
+objective (deep survival head), beam-search a sparse interpretable head on
+the frozen features, export the result as a serving artifact, and score it
+through the production registry/service stack.
 
 Default runs a CPU-sized variant; pass --full for the ~100M config
 (mamba2-130m at 12 layers; a few hundred steps is hours on 1 CPU core,
@@ -10,19 +11,14 @@ lowers at pod scale).
     PYTHONPATH=src python examples/train_survival_lm.py --steps 200
 """
 import argparse
+import os
+import tempfile
 
-import jax
 import numpy as np
 
-from repro.configs import get_config, reduced_config
-from repro.data.pipeline import SurvivalTextStream
-from repro.launch.mesh import make_host_mesh
-from repro.models import build_model
-from repro.survival import metrics
-from repro.survival.head import init_cox_head, pooled_features, sparse_refit
-from repro.configs.base import TrainConfig
-from repro.train.optimizer import init_opt_state
-from repro.train.trainer import TrainState, make_train_step
+from repro.serving import ModelRegistry, RiskService
+from repro.survival import deep
+from repro.survival.metrics import cindex
 
 
 def main(argv=None):
@@ -32,59 +28,47 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=48)
     ap.add_argument("--full", action="store_true",
                     help="~100M-param config instead of the CPU-sized one")
+    ap.add_argument("--export", default="",
+                    help="artifact directory (default: a temp dir)")
     args = ap.parse_args(argv)
 
-    cfg = get_config("mamba2-130m")
-    cfg = cfg.scaled(n_layers=12, vocab_size=2048) if args.full else \
-        reduced_config(cfg).scaled(n_layers=4, d_model=128,
-                                   vocab_size=512, ssm_state=32)
-    model = build_model(cfg)
-    n_params = sum(np.prod(x.shape) for x in jax.tree.leaves(
-        jax.eval_shape(model.init_params, jax.random.PRNGKey(0))))
-    print(f"[driver] arch=mamba2 family=ssm params={n_params/1e6:.1f}M "
-          f"objective=cox")
+    dcfg = deep.DeepSurvivalConfig(steps=args.steps, batch=args.batch,
+                                   seq=args.seq, full=args.full)
+    cfg = deep.model_config(dcfg)
+    print(f"[driver] arch={cfg.name} family={cfg.family} "
+          f"d_model={cfg.d_model} objective=cox")
 
-    params = model.init_params(jax.random.PRNGKey(0))
-    params["cox_head"] = init_cox_head(jax.random.PRNGKey(1), cfg.d_model)
-    state = TrainState(params=params, opt=init_opt_state(params))
-    tcfg = TrainConfig(learning_rate=2e-3, warmup_steps=20,
-                       total_steps=args.steps)
-    step_fn = jax.jit(make_train_step(model, tcfg, objective="cox"))
-    stream = SurvivalTextStream(cfg.vocab_size, args.seq, args.batch, seed=0)
-
-    losses = []
-    for step in range(args.steps):
-        state, m = step_fn(state, stream.batch_for_step(step))
-        losses.append(float(m["loss"]))
-        if step % 25 == 0:
-            print(f"[driver] step {step} cox-nll {losses[-1]:.4f}")
-    print(f"[driver] nll first10 {np.mean(losses[:10]):.4f} -> "
-          f"last10 {np.mean(losses[-10:]):.4f}")
-
-    # evaluation: CIndex of the learned risk on held-out batches
-    feats, times, events, risks = [], [], [], []
-    risk_fn = jax.jit(lambda p, b: model.risk_scores(p, b)[0])
-    feat_fn = jax.jit(lambda p, b: pooled_features(model, p, b))
-    for step in range(args.steps, args.steps + 4):
-        b = stream.batch_for_step(step)
-        risks.append(np.asarray(risk_fn(state.params, b)))
-        feats.append(np.asarray(feat_fn(state.params, b)))
-        times.append(b["time"])
-        events.append(b["event"])
-    t = np.concatenate(times)
-    e = np.concatenate(events)
-    ci = metrics.cindex(t, e, np.concatenate(risks))
-    print(f"[driver] held-out CIndex {ci:.4f} "
+    res = deep.run(dcfg)
+    print(f"[driver] nll first10 {np.mean(res.losses[:10]):.4f} -> "
+          f"last10 {np.mean(res.losses[-10:]):.4f}")
+    print(f"[driver] held-out CIndex deep {res.cindex_deep:.4f} "
           f"(0.5 = random, higher is better)")
+    print(f"[driver] beam-search sparse head: {res.nnz} of {cfg.d_model} "
+          f"features, CIndex {res.cindex_sparse:.4f}")
 
-    # the paper's technique as the final-layer trainer: sparse refit
-    f = np.concatenate(feats)
-    res = sparse_refit(f, t, e, k=min(8, cfg.d_model // 4))
-    risk_sparse = f @ res.betas[-1]
-    ci_s = metrics.cindex(t, e, risk_sparse)
-    nz = int((np.abs(res.betas[-1]) > 1e-8).sum())
-    print(f"[driver] beam-search sparse head: {nz} of {cfg.d_model} "
-          f"features, CIndex {ci_s:.4f}")
+    # -- export + serve: the deep artifact rides the linear serving stack --
+    export_dir = args.export or os.path.join(
+        tempfile.mkdtemp(prefix="deep_survival_"), "artifact")
+    res.artifact.save(export_dir)
+    print(f"[driver] artifact saved -> {export_dir}")
+
+    svc = RiskService(engine=None, max_batch=16)
+    reg = ModelRegistry(svc, prewarm_batches=(1, 16))
+    reg.rollout("deep_v1", export_dir)     # checksum-verify + warm + swap
+    svc.start()
+    try:
+        rids = [svc.submit(f) for f in res.features[:16]]
+        served = np.array([svc.wait(r).risk for r in rids])
+    finally:
+        svc.stop()
+    direct = np.exp(np.clip(res.features[:16] @ res.beta, -30.0, 30.0))
+    np.testing.assert_allclose(served, direct, rtol=1e-4)
+    ci_served = cindex(res.times, res.events,
+                       np.asarray(reg.engine().risk_scores(res.features)))
+    print(f"[driver] served {len(rids)} requests through "
+          f"ModelRegistry/RiskService (gen {reg.generation}); "
+          f"served CIndex {ci_served:.4f} — matches the sparse head")
+    return res
 
 
 if __name__ == "__main__":

@@ -36,6 +36,22 @@ def shard_map_compat(f, mesh, in_specs, out_specs, check_rep: bool = False):
                           out_specs=out_specs)
 
 
+def mesh_context(mesh):
+    """Ambient-mesh context manager across jax versions.
+
+    Newer jax wants ``jax.set_mesh(mesh)`` (or ``jax.sharding.use_mesh``);
+    on 0.4.x neither exists and the ``Mesh`` object is its own context
+    manager (``with mesh:``), which populates the thread-resources
+    physical mesh that ``models/compat.get_abstract_mesh`` falls back to.
+    """
+    setter = getattr(jax, "set_mesh", None)
+    if setter is None:
+        setter = getattr(jax.sharding, "use_mesh", None)
+    if setter is not None:
+        return setter(mesh)
+    return mesh
+
+
 def _make_mesh(shape, axes):
     """jax.make_mesh with Auto axis_types when this jax version has them."""
     axis_type = getattr(jax.sharding, "AxisType", None)

@@ -100,8 +100,11 @@ def describe() -> Dict[str, object]:
     """The effective runtime environment (imports jax lazily)."""
     import jax
 
+    from ..models import compat as models_compat
+
     tc = find_tcmalloc()
     return {
+        "mesh_probe": models_compat.MESH_PROBE,
         "backend": jax.default_backend(),
         "device_count": jax.device_count(),
         "jax_version": jax.__version__,
@@ -129,6 +132,16 @@ def log(prefix: str = "[runtime]") -> Dict[str, object]:
     if not tcmalloc_active() and find_tcmalloc():
         print(f"{prefix} note: tcmalloc present but not preloaded — "
               "launch via scripts/launch.sh to enable it", flush=True)
+    if d["mesh_probe"] != "abstract":
+        # loud on purpose: the last silent API drift here
+        # (jax.sharding.get_abstract_mesh missing on 0.4.37) took out all
+        # 41 model-zoo tests — surface the compat seam in every snapshot
+        from ..models import compat as models_compat
+
+        print(f"{prefix} WARNING: jax {d['jax_version']} has no public "
+              "mesh probe; pspec.constrain is on the thread-resources "
+              "physical-mesh fallback (supported floor: jax >= "
+              f"{models_compat.JAX_FLOOR})", flush=True)
     from ..obs import events as obs_events
 
     obs_events.emit("runtime.env", **{k: v for k, v in d.items()})

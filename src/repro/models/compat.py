@@ -1,0 +1,84 @@
+"""JAX-version compat seam for the ambient-mesh probe.
+
+``pspec.constrain`` needs to answer one question at trace time: *is there
+an ambient mesh, and what are its axis names/sizes?* The public API for
+that has drifted across JAX releases:
+
+  * newer JAX (>= 0.5) exposes ``jax.sharding.get_abstract_mesh()``,
+    populated by ``jax.sharding.use_mesh`` (and ``with mesh:`` blocks);
+  * 0.4.x has no public probe — the ``with mesh:`` context lives on the
+    thread-resources *physical* mesh
+    (``jax._src.mesh.thread_resources.env.physical_mesh``);
+  * with neither available, or with no mesh ambient, there is nothing to
+    constrain against.
+
+``get_abstract_mesh()`` here tries those in order and returns either a
+mesh-like object exposing ``axis_names`` / ``axis_sizes`` (both the
+AbstractMesh and the physical Mesh do) or ``None``. Callers keep the
+contract pspec has always had: **no ambient mesh -> no-op**, bit-identical
+to constraining on an empty spec.
+
+``MESH_PROBE`` records which probe this process resolved to, so
+``launch/runtime.py`` can surface a fallback in its env snapshot instead
+of the next API drift silently killing the model zoo again (the
+0.4.37 + ``get_abstract_mesh`` break took out 41 tests with one
+AttributeError).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+# the public probe, when this JAX has one
+_PUBLIC_PROBE = getattr(jax.sharding, "get_abstract_mesh", None)
+
+# which probe path this process uses: "abstract" (public API) or
+# "physical-fallback" (thread-resources mesh on older JAX)
+MESH_PROBE = "abstract" if _PUBLIC_PROBE is not None else "physical-fallback"
+
+# oldest JAX the fallback chain is known to cover (pinned in
+# requirements-dev.txt; runtime.log() warns when the fallback is active)
+JAX_FLOOR = "0.4.37"
+
+
+def _physical_mesh():
+    """Thread-resources physical mesh (``with mesh:`` on JAX 0.4.x)."""
+    try:
+        from jax._src import mesh as _mesh_lib
+        return _mesh_lib.thread_resources.env.physical_mesh
+    except (ImportError, AttributeError):
+        return None
+
+
+def get_abstract_mesh(probe=None) -> Optional[object]:
+    """The ambient mesh as an ``axis_names``/``axis_sizes`` carrier, or
+    ``None`` when no mesh is ambient (or no probe exists in this JAX).
+
+    ``probe`` overrides the public-API probe (tests monkeypatch it to
+    lock in the fallback order).
+    """
+    probe = probe if probe is not None else _PUBLIC_PROBE
+    if probe is not None:
+        try:
+            am = probe()
+        except (AttributeError, TypeError):
+            am = None
+        # 0.4.x's private get_abstract_mesh returns () when unset; newer
+        # versions return an empty AbstractMesh — both fail this guard
+        if am is not None and getattr(am, "axis_names", None):
+            return am
+    pm = _physical_mesh()
+    if pm is None or getattr(pm, "empty", True) or not pm.axis_names:
+        return None
+    return pm
+
+
+def mesh_probe_status() -> dict:
+    """Probe provenance for the runtime env snapshot."""
+    am = get_abstract_mesh()
+    return {
+        "probe": MESH_PROBE,
+        "jax_floor": JAX_FLOOR,
+        "ambient_axes": tuple(am.axis_names) if am is not None else (),
+    }

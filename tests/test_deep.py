@@ -1,0 +1,89 @@
+"""Deep-survival pipeline: train -> sparse refit -> artifact -> serving.
+
+Tiny shapes throughout (the pipeline's full-size path is exercised by
+examples/train_survival_lm.py and benchmarks/bench_deep.py); what's
+locked here is the *contract*: losses finite and decreasing, the refit
+head is genuinely k-sparse, the exported artifact round-trips through
+disk + ModelRegistry and serves through RiskService with scores that
+match the sparse head bit-for-bit.
+"""
+import numpy as np
+import pytest
+
+from repro.serving import ModelRegistry, RiskService, SurvivalModel
+from repro.survival import deep
+
+
+@pytest.fixture(scope="module")
+def result():
+    return deep.run(steps=16, batch=16, seq=20, k=4, refit_batches=2,
+                    log_every=0, warmup_steps=4)
+
+
+def test_training_losses_finite_and_improving(result):
+    assert len(result.losses) == 16
+    assert np.isfinite(result.losses).all()
+    assert np.mean(result.losses[-4:]) < np.mean(result.losses[:4]) + 0.05
+
+
+def test_sparse_head_is_k_sparse(result):
+    assert result.nnz <= 4
+    assert result.beta.shape == (result.cfg.d_model,)
+    assert len(result.beam.supports[-1]) == result.nnz
+
+
+def test_cindexes_beat_random(result):
+    assert result.cindex_deep > 0.5
+    assert result.cindex_sparse > 0.5
+
+
+def test_artifact_shape_and_sparsity(result):
+    art = result.artifact
+    assert art.p == result.cfg.d_model
+    assert art.is_sparse and art.k == result.nnz
+    assert art.base_cumhaz.shape == (1, art.n_grid)
+    # cumulative hazard is nonnegative and monotone on the grid
+    assert (art.base_cumhaz >= 0).all()
+    assert (np.diff(art.base_cumhaz, axis=1) >= -1e-6).all()
+
+
+def test_artifact_roundtrip_and_serving(result, tmp_path):
+    path = str(tmp_path / "deep_artifact")
+    result.artifact.save(path)
+    loaded = SurvivalModel.load(path)
+    np.testing.assert_array_equal(loaded.beta, result.artifact.beta)
+
+    svc = RiskService(None, max_batch=8)
+    reg = ModelRegistry(svc, prewarm_batches=(1, 8))
+    reg.rollout("deep_v1", path)
+    svc.start()
+    try:
+        rids = [svc.submit(f) for f in result.features[:8]]
+        served = np.array([svc.wait(r).risk for r in rids])
+    finally:
+        svc.stop()
+    expect = np.exp(np.clip(result.features[:8] @ result.beta, -30., 30.))
+    np.testing.assert_allclose(served, expect, rtol=1e-4)
+    assert reg.get("deep_v1").state == "live"
+
+
+def test_featurizer_matches_collected_features(result):
+    from repro.data.pipeline import SurvivalTextStream
+    from repro.models import build_model
+    model = build_model(result.cfg)
+    featurize = deep.make_featurizer(model)
+    stream = SurvivalTextStream(result.cfg.vocab_size, 20, 16, seed=0)
+    b = stream.batch_for_step(16)           # first held-out batch
+    risk, feats = featurize(result.state.params, b)
+    np.testing.assert_allclose(np.asarray(feats),
+                               result.features[:16], rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(risk),
+                               result.risks_deep[:16], rtol=1e-5)
+
+
+def test_config_override_and_full_path():
+    dcfg = deep.DeepSurvivalConfig(full=True)
+    cfg = deep.model_config(dcfg)
+    assert cfg.n_layers == 12 and cfg.vocab_size == 2048
+    reduced = deep.model_config(deep.DeepSurvivalConfig())
+    assert reduced.d_model == 128 and reduced.vocab_size == 512

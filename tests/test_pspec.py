@@ -1,0 +1,163 @@
+"""pspec.constrain contract + the models/compat mesh-probe seam.
+
+The regression class under test: JAX 0.4.37 has no public
+``jax.sharding.get_abstract_mesh``, and the raw call killed all 41
+model-zoo tests with one AttributeError. The seam must (a) no-op without
+a mesh, (b) resolve through whichever probe this JAX version has, and
+(c) keep working when the public probe disappears again.
+"""
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import compat, pspec
+
+
+# -- resolve_spec: pure resolution logic (no mesh required) -----------------
+
+NAMES = ("data", "model")
+SIZES = (("data", 4), ("model", 2))
+POD_NAMES = ("pod", "data", "model")
+POD_SIZES = (("pod", 2), ("data", 4), ("model", 2))
+
+
+def test_resolve_dp_without_pod_axis():
+    spec = pspec.resolve_spec(("dp", None, "model"), (8, 16, 64),
+                              NAMES, SIZES)
+    assert spec == (("data",), None, "model")
+
+
+def test_resolve_dp_with_pod_axis():
+    spec = pspec.resolve_spec(("dp", None, "model"), (8, 16, 64),
+                              POD_NAMES, POD_SIZES)
+    assert spec == (("pod", "data"), None, "model")
+
+
+def test_resolve_dp_include_model_knob():
+    spec = pspec.resolve_spec(("dp",), (16,), NAMES, SIZES,
+                              dp_include_model=True)
+    assert spec == ((("data", "model")),)
+
+
+def test_resolve_divisibility_fallback_to_none():
+    # batch 6 is not divisible by pod*data=8, d_model 65 not by model=2
+    spec = pspec.resolve_spec(("dp", None, "model"), (6, 16, 65),
+                              POD_NAMES, POD_SIZES)
+    assert spec == (None, None, None)
+
+
+def test_resolve_unknown_axis_is_replicated():
+    spec = pspec.resolve_spec(("expert",), (8,), NAMES, SIZES)
+    assert spec == (None,)
+
+
+# -- constrain: ambient-mesh behavior ---------------------------------------
+
+def test_constrain_no_mesh_is_identity():
+    x = jnp.ones((4, 8))
+    assert pspec.constrain(x, "dp", None) is x
+
+
+def test_constrain_no_mesh_inside_jit():
+    @jax.jit
+    def f(x):
+        return pspec.constrain(x, "dp", None, "model") * 2.0
+
+    out = f(jnp.ones((2, 3, 4)))
+    np.testing.assert_array_equal(np.asarray(out), 2.0)
+
+
+def test_constrain_under_ambient_mesh():
+    """With a real 1-device mesh ambient, constrain must go through
+    with_sharding_constraint (and stay numerically a no-op)."""
+    from repro.launch.mesh import mesh_context, make_host_mesh
+    mesh = make_host_mesh()
+    x = jnp.arange(8.0).reshape(4, 2)
+    with mesh_context(mesh):
+        am = compat.get_abstract_mesh()
+        assert am is not None
+        assert set(("data", "model")) <= set(am.axis_names)
+        y = pspec.constrain(x, "dp", "model")
+    np.testing.assert_array_equal(np.asarray(y), np.asarray(x))
+
+
+# -- compat seam: probe order + missing-API regression ----------------------
+
+def test_compat_returns_none_outside_any_mesh():
+    assert compat.get_abstract_mesh() is None
+
+
+def test_compat_missing_get_abstract_mesh_regression(monkeypatch):
+    """The 0.4.37 break: jax.sharding has no get_abstract_mesh. The seam
+    must resolve via the thread-resources physical mesh, not raise."""
+    monkeypatch.setattr(compat, "_PUBLIC_PROBE", None)
+    from repro.launch.mesh import mesh_context, make_host_mesh
+    assert compat.get_abstract_mesh() is None       # still no mesh -> None
+    with mesh_context(make_host_mesh()):
+        am = compat.get_abstract_mesh()
+        assert am is not None
+        assert dict(zip(am.axis_names, am.axis_sizes)) == {"data": 1,
+                                                           "model": 1}
+
+
+def test_compat_prefers_public_probe(monkeypatch):
+    """When a public probe exists it wins over the physical fallback."""
+
+    class FakeMesh:
+        axis_names = ("pod", "data")
+        axis_sizes = (2, 8)
+
+    am = compat.get_abstract_mesh(probe=lambda: FakeMesh())
+    assert am.axis_names == ("pod", "data")
+
+
+def test_compat_empty_abstract_mesh_falls_through():
+    """A probe returning an unset/empty mesh (0.4.x private API returns
+    ``()``) must fall through to the physical mesh, not be trusted."""
+    assert compat.get_abstract_mesh(probe=lambda: ()) is None
+    from repro.launch.mesh import mesh_context, make_host_mesh
+    with mesh_context(make_host_mesh()):
+        am = compat.get_abstract_mesh(probe=lambda: ())
+        assert am is not None and "data" in am.axis_names
+
+
+def test_compat_probe_raising_attributeerror_is_survivable():
+    def broken():
+        raise AttributeError("module 'jax.sharding' has no attribute ...")
+
+    assert compat.get_abstract_mesh(probe=broken) is None
+
+
+def test_mesh_probe_status_shape():
+    st = compat.mesh_probe_status()
+    assert st["probe"] in ("abstract", "physical-fallback")
+    assert st["ambient_axes"] == ()
+    assert isinstance(st["jax_floor"], str)
+
+
+def test_constrain_resolves_pod_dp_spec():
+    """End-to-end: a fake ambient mesh with a pod axis resolves "dp" to
+    ("pod","data") and divisibility gates each dim independently."""
+
+    class FakeMesh:
+        axis_names = ("pod", "data")
+        axis_sizes = (2, 2)
+
+    captured = {}
+
+    def fake_constrain(x, spec):
+        captured["spec"] = spec
+        return x
+
+    orig_mesh, orig_wsc = pspec._mesh, jax.lax.with_sharding_constraint
+    pspec._mesh = lambda: FakeMesh()
+    jax.lax.with_sharding_constraint = fake_constrain
+    try:
+        pspec.constrain(jnp.ones((8, 5)), "dp", "data")
+    finally:
+        pspec._mesh = orig_mesh
+        jax.lax.with_sharding_constraint = orig_wsc
+    # dim0: 8 % (2*2) == 0 -> ("pod","data"); dim1: 5 % 2 != 0 -> None
+    assert tuple(captured["spec"]) == (("pod", "data"), None)
